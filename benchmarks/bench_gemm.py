@@ -1,0 +1,65 @@
+"""FCCM'22 throughput-table analogue: generated-kernel GEMM benchmark.
+
+Wall-times on this CPU container are *not* TPU numbers; alongside them we
+report the generator's datapath model (limbs, int-ops/MAC, modeled pJ/MAC,
+modeled FPGA watts) which is the basis of the Fig. 2/3 energy axes, and the
+MXU-native baseline for the same shapes.
+"""
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import AccumulatorSpec, FP32, BF16, generate_gemm
+
+SHAPES = [(64, 256, 64), (128, 512, 128)]
+SPECS = [AccumulatorSpec.paper_91bit(), AccumulatorSpec(9, 6, -20)]
+
+
+def timeit(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+    print("name,us_per_call,derived")
+    for (M, K, N) in SHAPES:
+        a = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+        flops = 2 * M * K * N
+
+        g_native = generate_gemm(None, FP32, "native")
+        us = timeit(g_native.fn, a, b)
+        print(f"gemm_native_f32_{M}x{K}x{N},{us:.0f},"
+              f"GFLOPs={flops/us/1e3:.2f}|{g_native.report.describe()!r}")
+
+        for spec in SPECS:
+            for target in ("simulate", "pallas"):
+                g = generate_gemm(spec, FP32, target, tile=(32, 32, 128))
+                us = timeit(g.fn, a, b, reps=1)
+                r = g.report
+                print(f"gemm_{target}_w{spec.width}_{M}x{K}x{N},{us:.0f},"
+                      f"GFLOPs={flops/us/1e3:.3f}"
+                      f"|limbs={r.num_limbs}|intops/mac={r.int_ops_per_mac}"
+                      f"|pJ/MAC={r.pj_per_mac_tpu_model:.1f}"
+                      f"|P_fpga={r.watts_fpga_model:.3f}W")
+    # bit-exactness cross-check at bench shapes
+    spec = AccumulatorSpec.paper_91bit()
+    gs = generate_gemm(spec, FP32, "simulate")
+    gp = generate_gemm(spec, FP32, "pallas", tile=(32, 32, 128))
+    a = jnp.asarray(rng.standard_normal((48, 160)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((160, 24)), jnp.float32)
+    same = bool(jnp.array_equal(gs.fn(a, b), gp.fn(a, b)))
+    print(f"gemm_parity_check,0,bitexact={same}")
+    assert same
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Roofline table: reads the dry-run JSONs (results/dryrun) and prints the
+three-term roofline per (arch x shape x mesh) — EXPERIMENTS.md §Roofline is
+generated from this output."""
+
+import glob
+import json
+import os
+import sys
+
+
+def load(out_dir="results/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def run(out_dir="results/dryrun"):
+    rows = load(out_dir)
+    print("name,us_per_call,derived")
+    done = skipped = 0
+    for r in rows:
+        tag = f"roofline_{r['arch']}_{r['shape']}_{r.get('mesh', '-')}"
+        if "skipped" in r:
+            skipped += 1
+            print(f"{tag},0,SKIP:{r['skipped']}")
+            continue
+        done += 1
+        rf = r["roofline"]
+        dom_t = max(rf["t_compute_s"], rf["t_memory_s"], rf["t_collective_s"])
+        frac = rf["t_compute_s"] / dom_t if dom_t else 0.0
+        print(f"{tag},{dom_t*1e6:.0f},"
+              f"t_comp={rf['t_compute_s']*1e3:.2f}ms"
+              f"|t_mem={rf['t_memory_s']*1e3:.2f}ms"
+              f"|t_coll={rf['t_collective_s']*1e3:.2f}ms"
+              f"|dom={rf['dominant']}"
+              f"|comp_frac={frac:.3f}"
+              f"|useful={rf['useful_flops_ratio'] and round(rf['useful_flops_ratio'],3)}"
+              f"|mem/dev={r['memory']['per_device_total']/2**30:.2f}GiB")
+    print(f"roofline_summary,0,cells={done}|skipped={skipped}")
+
+
+if __name__ == "__main__":
+    run(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")

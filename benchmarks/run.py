@@ -1,0 +1,40 @@
+"""Benchmark harness — one benchmark per paper table/figure.
+
+    bench_gemm       -> FCCM'22 companion throughput table
+    bench_ssh        -> paper Fig. 2 (SSH reproducibility + power)
+    bench_ai_energy  -> paper Fig. 3 (accuracy vs energy Pareto)
+    bench_roofline   -> EXPERIMENTS.md §Roofline source (from dry-run JSONs)
+
+Each prints ``name,us_per_call,derived`` CSV. Benchmarks run as subprocesses
+so each controls its own JAX config (x64 for SSH, single device everywhere).
+"""
+
+import os
+import subprocess
+import sys
+
+BENCHES = [
+    ("bench_gemm", {}),
+    ("bench_ssh", {"JAX_ENABLE_X64": "1"}),
+    ("bench_ai_energy", {}),
+    ("bench_roofline", {}),
+]
+
+
+def main() -> None:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    failures = 0
+    for mod, env_extra in BENCHES:
+        env = dict(os.environ, PYTHONPATH=os.path.join(root, "src"),
+                   **env_extra)
+        print(f"### {mod}", flush=True)
+        r = subprocess.run([sys.executable, "-m", f"benchmarks.{mod}"],
+                           env=env, cwd=root)
+        if r.returncode != 0:
+            failures += 1
+            print(f"### {mod} FAILED rc={r.returncode}", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""The paper's core experiment as an example: sweep ⟨ovf,msb,lsb⟩ for one
+workload and print the accuracy/energy trade-off + the generator's datapath
+reports (Fig. 3 in miniature).
+
+    PYTHONPATH=src python examples/numerics_sweep.py
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import AccumulatorSpec, BF16, FP32
+from repro.core import energy
+from repro.core.dispatch import GemmConfig, NumericsPolicy, use_policy
+from repro.core.fdp import fdp_gemm
+from repro.core.metrics import correct_bits
+
+rng = np.random.default_rng(0)
+M, K, N = 32, 512, 16
+a = jnp.asarray(rng.standard_normal((M, K)) * 0.1, jnp.float32)
+b = jnp.asarray(rng.standard_normal((K, N)) * 0.1, jnp.float32)
+exact = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+
+print(f"{'accumulator':28s} {'bits':>6s} {'watts':>7s} {'pJ/MAC':>7s}")
+for msb, lsb in [(2, -4), (6, -8), (6, -20), (10, -30), (30, -30)]:
+    spec = AccumulatorSpec(ovf=9, msb=msb, lsb=lsb)
+    got = np.asarray(fdp_gemm(a, b, spec, FP32))
+    bits = float(np.median(correct_bits(got, exact, cap=24)))
+    p = energy.spec_power(FP32, spec)
+    pj = energy.tpu_fdp_pj_per_mac(FP32.precision, spec.num_limbs)
+    print(f"<ovf:9, msb:{msb:3d}, lsb:{lsb:3d}>   {bits:6.1f} "
+          f"{p.watts:7.3f} {pj:7.1f}")
+
+print("\n(the paper's point: pick the cheapest accumulator that still meets "
+      "the workload's accuracy bar)")

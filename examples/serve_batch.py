@@ -1,0 +1,24 @@
+"""Serving example: batched prefill + incremental greedy decode with KV/SSM
+caches across three model families (dense, MoE, SSM).
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.serve import serve
+from repro.models import init
+
+for arch in ("qwen3-0.6b", "dbrx-132b", "mamba2-1.3b"):
+    cfg = get_config(arch).reduced()
+    params = init(cfg, jax.random.key(0))
+    prompts = jax.random.randint(jax.random.key(1), (4, 10), 0,
+                                 cfg.vocab_size)
+    t0 = time.time()
+    toks = serve(cfg, params, prompts, gen_len=12)
+    dt = time.time() - t0
+    print(f"{arch:14s} ({cfg.family:6s}): {4 * 12 / dt:6.1f} tok/s  "
+          f"sample={toks[0][:6].tolist()}")

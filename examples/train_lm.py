@@ -1,0 +1,52 @@
+"""End-to-end driver: train a reduced LM for a few hundred steps on CPU with
+checkpointing and fault-tolerant restart, then greedy-decode from it.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+
+import argparse
+import shutil
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.synthetic import SyntheticLM
+from repro.launch.serve import serve
+from repro.models import LOCAL
+from repro.train.loop import Trainer, make_train_step
+from repro.train.optimizer import adamw, cosine_schedule
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    opt = adamw(lr=cosine_schedule(3e-3, warmup=20, total=args.steps))
+    step_fn = make_train_step(cfg, opt, LOCAL, remat="none", donate=False)
+    ds = SyntheticLM(cfg.vocab_size, seq_len=64, global_batch=16, seed=0)
+
+    def data(step):
+        tb = ds.batch(step)
+        return {"tokens": tb.tokens, "targets": tb.targets,
+                "loss_mask": tb.loss_mask}
+
+    ckpt = "/tmp/repro_example_ckpt"
+    shutil.rmtree(ckpt, ignore_errors=True)
+    trainer = Trainer(cfg, opt, data, step_fn, ckpt, save_every=50)
+    params, _ = trainer.run(args.steps)
+    losses = [m["loss"] for m in trainer.metrics_log]
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"({args.steps} steps, ckpts at {ckpt})")
+    assert losses[-1] < losses[0]
+
+    prompts = jax.random.randint(jax.random.key(7), (2, 8), 0, cfg.vocab_size)
+    toks = serve(cfg, params, prompts, gen_len=12)
+    print("greedy continuation:", toks[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+#!/usr/bin/env python
+"""Render EXPERIMENTS.md roofline table from dry-run JSONs."""
+import glob, json, sys
+
+rows = []
+for p in sorted(glob.glob("results/dryrun/*.json")):
+    r = json.load(open(p))
+    tag = p.split("/")[-1][:-5]
+    variant = ""
+    if "_ep_" in tag: variant = " [EP]"
+    if tag.endswith("_ddp"): variant = " [DDP]"
+    if tag.endswith("_decode_tp"): variant = " [decTP]"
+    if tag.endswith("_kvint8"): variant = " [decTP+kv8]"
+    if "skipped" in r:
+        rows.append((r["arch"], r["shape"], "-", variant, None))
+        continue
+    rows.append((r["arch"], r["shape"], r["mesh"], variant, r))
+
+print("| arch | shape | mesh | t_comp | t_mem | t_coll | dominant | comp-frac | useful | mem/dev |")
+print("|---|---|---|---|---|---|---|---|---|---|")
+seen_skip = set()
+for arch, shape, mesh, variant, r in rows:
+    if r is None:
+        if (arch, shape) not in seen_skip:
+            seen_skip.add((arch, shape))
+            print(f"| {arch} | {shape} | — | — | — | — | SKIP (full-attention; DESIGN §4) | | | |")
+        continue
+    rf = r["roofline"]
+    dom_t = max(rf["t_compute_s"], rf["t_memory_s"], rf["t_collective_s"])
+    frac = rf["t_compute_s"] / dom_t if dom_t else 0
+    print(f"| {arch}{variant} | {shape} | {mesh} "
+          f"| {rf['t_compute_s']*1e3:.1f}ms | {rf['t_memory_s']*1e3:.1f}ms "
+          f"| {rf['t_collective_s']*1e3:.1f}ms | {rf['dominant']} "
+          f"| {frac:.2f} | {rf['useful_flops_ratio']:.2f} "
+          f"| {r['memory']['per_device_total']/2**30:.1f}GiB |")

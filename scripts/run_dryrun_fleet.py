@@ -1,0 +1,55 @@
+#!/usr/bin/env python
+"""Run every (arch x shape x mesh) dry-run cell as a subprocess pool."""
+import itertools
+import os
+import subprocess
+import sys
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+ARCHS_SMALL_FIRST = [
+    "qwen3-0.6b", "mamba2-1.3b", "zamba2-2.7b", "llama3.2-3b", "paligemma-3b",
+    "qwen1.5-4b", "stablelm-12b", "whisper-large-v3", "dbrx-132b",
+    "grok-1-314b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+OUT = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+CONC = int(os.environ.get("FLEET_CONCURRENCY", "3"))
+MOE_IMPL = os.environ.get("FLEET_MOE_IMPL", "tp")
+PROFILE = os.environ.get("FLEET_PROFILE", "fsdp")
+REMAT = os.environ.get("FLEET_REMAT", "block")
+
+cells = [(a, s, mp) for a, s, mp in itertools.product(
+    ARCHS_SMALL_FIRST, SHAPES, (False, True))]
+
+
+def run(cell):
+    arch, shape, mp = cell
+    tag = f"{arch}_{shape}_{'pod2' if mp else 'pod1'}_{MOE_IMPL}_{REMAT}" + (f"_{PROFILE}" if PROFILE != "auto" else "")
+    path = os.path.join(OUT, tag + ".json")
+    if os.path.exists(path):
+        return tag, "cached", 0.0
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", OUT, "--moe-impl", MOE_IMPL, "--param-profile", PROFILE,
+           "--remat", REMAT]
+    if mp:
+        cmd.append("--multi-pod")
+    env = dict(os.environ, PYTHONPATH="src")
+    t0 = time.time()
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       timeout=7200)
+    dt = time.time() - t0
+    status = "ok" if r.returncode == 0 else "FAIL"
+    if r.returncode != 0:
+        with open(path + ".log", "w") as f:
+            f.write(r.stdout + "\n" + r.stderr)
+    return tag, status, dt
+
+
+os.makedirs(OUT, exist_ok=True)
+t0 = time.time()
+with ThreadPoolExecutor(max_workers=CONC) as ex:
+    for tag, status, dt in ex.map(run, cells):
+        print(f"[fleet {time.time()-t0:7.0f}s] {tag}: {status} ({dt:.0f}s)",
+              flush=True)
+print(f"[fleet] done in {time.time()-t0:.0f}s")

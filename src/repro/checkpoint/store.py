@@ -1,0 +1,168 @@
+"""Atomic, restartable, elastic checkpointing (no external deps).
+
+Layout:  <dir>/step_00000123/
+             manifest.json       (treedef, shapes, dtypes, per-leaf checksum)
+             leaf_000.npy ...
+Written to a tmp dir then os.rename'd (atomic on POSIX) — a crash mid-save
+never corrupts the latest checkpoint. ``load_latest`` skips manifests that
+fail validation (torn writes on shared filesystems).
+
+Elasticity: ``load_latest(shardings=...)`` device_puts each leaf with the
+given sharding, so a checkpoint taken on one mesh restores onto another
+(different device count / topology) — the reshard happens at load.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Optional
+
+import jax
+import numpy as np
+
+
+class CheckpointStore:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._async_thread: Optional[threading.Thread] = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, pytree, async_: bool = False):
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 pytree)
+        if async_:
+            self.wait()
+            self._async_thread = threading.Thread(
+                target=self._write, args=(step, host_tree), daemon=True)
+            self._async_thread.start()
+        else:
+            self._write(step, host_tree)
+
+    def wait(self):
+        if self._async_thread is not None:
+            self._async_thread.join()
+            self._async_thread = None
+
+    def _write(self, step: int, host_tree):
+        leaves, treedef = jax.tree.flatten(host_tree)
+        name = f"step_{step:08d}"
+        tmp = os.path.join(self.dir, f".tmp_{name}")
+        final = os.path.join(self.dir, name)
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        counter = [0]
+        skeleton = _make_skeleton(host_tree, counter)
+        with open(os.path.join(tmp, "skeleton.json"), "w") as f:
+            json.dump(skeleton, f)
+        manifest = {"step": step, "treedef": str(treedef), "leaves": []}
+        for i, leaf in enumerate(leaves):
+            arr = np.asarray(leaf)
+            fn = f"leaf_{i:04d}.npy"
+            np.save(os.path.join(tmp, fn), arr)
+            with open(os.path.join(tmp, fn), "rb") as f:
+                digest = hashlib.sha256(f.read()).hexdigest()[:16]
+            manifest["leaves"].append(
+                {"file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype),
+                 "sha": digest})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        shutil.rmtree(final, ignore_errors=True)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- load ---------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for n in os.listdir(self.dir):
+            if n.startswith("step_"):
+                try:
+                    out.append(int(n[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def _validate(self, path) -> Optional[dict]:
+        try:
+            with open(os.path.join(path, "manifest.json")) as f:
+                manifest = json.load(f)
+            for rec in manifest["leaves"]:
+                with open(os.path.join(path, rec["file"]), "rb") as f:
+                    if hashlib.sha256(f.read()).hexdigest()[:16] != rec["sha"]:
+                        return None
+            return manifest
+        except (OSError, json.JSONDecodeError, KeyError):
+            return None
+
+    def load_latest(self, shardings=None, example_tree=None):
+        """Returns (step, pytree) or None. Corrupt checkpoints are skipped.
+        ``shardings``: optional pytree of NamedSharding for elastic restore.
+        ``example_tree``: pytree giving the treedef (else the saved structure
+        is rebuilt via jax.tree.unflatten on the stored treedef repr, which
+        requires example_tree for custom nodes — dicts/lists round-trip)."""
+        for step in reversed(self.all_steps()):
+            path = os.path.join(self.dir, f"step_{step:08d}")
+            manifest = self._validate(path)
+            if manifest is None:
+                continue
+            leaves = [np.load(os.path.join(path, rec["file"]))
+                      for rec in manifest["leaves"]]
+            if example_tree is not None:
+                treedef = jax.tree.structure(example_tree)
+            else:
+                # saved trees here are nested dict/list/tuple: rebuild from
+                # the stored treedef repr via eval of the structure of a
+                # freshly flattened skeleton is fragile — instead store leaves
+                # positionally against the CALLER's latest structure. We keep
+                # a skeleton file for pure-dict trees:
+                treedef = None
+            if treedef is not None:
+                tree = jax.tree.unflatten(treedef, leaves)
+            else:
+                with open(os.path.join(path, "skeleton.json")) as f:
+                    skeleton = json.load(f)
+                tree = _from_skeleton(skeleton, leaves)
+            if shardings is not None:
+                flat_s = jax.tree.leaves(shardings)
+                flat_l, td = jax.tree.flatten(tree)
+                flat_l = [jax.device_put(l, s)
+                          for l, s in zip(flat_l, flat_s)]
+                tree = jax.tree.unflatten(td, flat_l)
+            return step, tree
+        return None
+
+def _make_skeleton(tree, counter):
+    """JSON-serializable structure with leaf indices (dict/list/tuple trees)."""
+    if isinstance(tree, dict):
+        return {"__dict__": {k: _make_skeleton(tree[k], counter)
+                             for k in sorted(tree)}}
+    if isinstance(tree, (list, tuple)):
+        kind = "__tuple__" if isinstance(tree, tuple) else "__list__"
+        return {kind: [_make_skeleton(v, counter) for v in tree]}
+    i = counter[0]
+    counter[0] += 1
+    return {"__leaf__": i}
+
+
+def _from_skeleton(skel, leaves):
+    if "__leaf__" in skel:
+        return leaves[skel["__leaf__"]]
+    if "__dict__" in skel:
+        return {k: _from_skeleton(v, leaves)
+                for k, v in skel["__dict__"].items()}
+    if "__list__" in skel:
+        return [_from_skeleton(v, leaves) for v in skel["__list__"]]
+    if "__tuple__" in skel:
+        return tuple(_from_skeleton(v, leaves) for v in skel["__tuple__"])
+    raise ValueError(f"bad skeleton node: {skel}")

@@ -1,0 +1,20 @@
+# The paper's primary contribution: numerically-tailored GEMM computation.
+# - formats:     IEEE-754 / bfloat16 / posit decode-encode front end
+# - accumulator: the ⟨ovf,msb,lsb⟩ fixed-point (Kulisch) scratchpad, int32 limbs
+# - fdp:         fused dot product / GEMM with exact accumulation
+# - generator:   flopoco-analogue kernel generator + datapath report
+# - dispatch:    BLAS-style transparent numerics policy (OpenBLAS-swap analogue)
+# - metrics:     correct-bits / reproducibility probes (Fig. 2)
+# - energy:      VU3P-calibrated power model (Fig. 2/3 energy axis)
+from .accumulator import AccumulatorSpec, SAFE_CHUNK
+from .formats import (BF16, FP16, FP32, POSIT8_0, POSIT16_1, POSIT32_2,
+                      FloatFormat, PositFormat, get_format)
+from .fdp import dd_dot, fdp_dot, fdp_gemm, fma_dot
+from .generator import DatapathReport, GeneratedGemm, generate_gemm
+
+__all__ = [
+    "AccumulatorSpec", "SAFE_CHUNK", "FP32", "BF16", "FP16",
+    "POSIT16_1", "POSIT32_2", "POSIT8_0", "FloatFormat", "PositFormat",
+    "get_format", "fdp_dot", "fdp_gemm", "fma_dot", "dd_dot",
+    "generate_gemm", "GeneratedGemm", "DatapathReport",
+]

@@ -1,0 +1,416 @@
+"""The numerically-tailored fixed-point accumulator (Kulisch scratchpad).
+
+This is the paper's central object: a two's-complement fixed-point register
+parameterized by ``⟨ovf, msb, lsb⟩`` into which exact floating-point products
+are accumulated **without intermediate rounding**.  On the FPGA this is a wide
+carry-save register; on TPU we represent it as a vector of int32 *limbs*, each
+carrying a 16-bit digit plus carry headroom, so the whole algebra runs on the
+vector unit (VPU) with plain int32 adds/shifts — exactly the kind of substrate
+the MXU-adjacent VPU is good at.
+
+Normative semantics (see DESIGN.md §2.2):
+  * value(limbs) = Σ_l limbs[l] · 2^(lsb + 16·l)   (limbs int32, signed)
+  * products are quantized ONCE at entry: round-toward-zero at 2^lsb
+    (``trunc``, hardware default — drops the wires below lsb) or RNE,
+  * additions are exact; carries are propagated lazily (≤ 2^14 products
+    between normalizations, enforced by callers via chunking),
+  * the register wraps (or saturates) at W = ovf + msb - lsb + 1 bits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .formats import Decoded, _ilog2
+
+Array = jax.Array
+
+LIMB_BITS = 16
+LIMB_MASK = (1 << LIMB_BITS) - 1
+# Max products safely accumulated between carry normalizations:
+# per product, a limb receives < 2^17 in magnitude (two 16-bit digit halves);
+# int32 headroom 2^31 -> stay strictly below: 2^13 * 2^17 = 2^30.
+SAFE_CHUNK = 1 << 13
+
+
+@dataclasses.dataclass(frozen=True)
+class AccumulatorSpec:
+    """⟨ovf, msb, lsb⟩ accumulator. Width W = ovf + msb - lsb + 1 bits.
+
+    ``msb``: weight of the largest magnitude bit kept (2^msb).
+    ``lsb``: weight of the smallest bit kept (2^lsb), lsb <= msb.
+    ``ovf``: carry headroom bits on top of msb.
+    """
+
+    ovf: int
+    msb: int
+    lsb: int
+    round_mode: str = "trunc"        # product-entry quantization: trunc | rne
+    overflow_mode: str = "wrap"      # wrap | saturate
+
+    def __post_init__(self):
+        if self.lsb > self.msb:
+            raise ValueError(f"lsb ({self.lsb}) > msb ({self.msb})")
+        if self.round_mode not in ("trunc", "rne"):
+            raise ValueError(self.round_mode)
+        if self.overflow_mode not in ("wrap", "saturate"):
+            raise ValueError(self.overflow_mode)
+
+    @property
+    def width(self) -> int:
+        return self.ovf + self.msb - self.lsb + 1
+
+    @property
+    def num_limbs(self) -> int:
+        return -(-self.width // LIMB_BITS)
+
+    def describe(self) -> str:
+        return (f"FDP<ovf:{self.ovf}, msb:{self.msb}, lsb:{self.lsb}> "
+                f"({self.width}-bit, {self.num_limbs} limbs, {self.round_mode}/"
+                f"{self.overflow_mode})")
+
+    @classmethod
+    def paper_91bit(cls) -> "AccumulatorSpec":
+        """The paper's flagship 91-bit ⟨ovf:30, msb:30, lsb:-30⟩ instance."""
+        return cls(ovf=30, msb=30, lsb=-30)
+
+    @classmethod
+    def for_exact(cls, fmt, max_terms: int) -> "AccumulatorSpec":
+        """Size an accumulator so that accumulating ``max_terms`` products of
+        ``fmt`` values is EXACT and overflow-free (FCCM'22 §IV sizing rule)."""
+        p = fmt.precision
+        emax, emin = fmt.emax, getattr(fmt, "emin", -fmt.emax)
+        msb = 2 * emax + 2                   # |a*b| < 2^(2emax+2)
+        lsb = 2 * (emin - (p - 1))           # smallest product bit (subnormal²)
+        ovf = max(1, math.ceil(math.log2(max(max_terms, 2))))
+        return cls(ovf=ovf, msb=msb, lsb=lsb)
+
+    @classmethod
+    def quire(cls, posit_fmt, max_terms: int = 1 << 20) -> "AccumulatorSpec":
+        """The posit standard's *quire* for posit⟨n,es⟩: an accumulator wide
+        enough that any dot product of posits is exact (maxpos² down to
+        minpos²) with carry headroom — the posit-native instance of the
+        paper's ⟨ovf,msb,lsb⟩ family."""
+        n, es = posit_fmt.nbits, posit_fmt.es
+        max_scale = (n - 2) * (1 << es)      # exponent of maxpos
+        msb = 2 * max_scale + 2
+        lsb = -2 * max_scale - 2 * posit_fmt.precision
+        ovf = max(1, math.ceil(math.log2(max(max_terms, 2))))
+        return cls(ovf=ovf, msb=msb, lsb=lsb)
+
+
+def zeros(spec: AccumulatorSpec, shape: Sequence[int] = ()) -> Array:
+    """Fresh accumulator state: shape (*shape, num_limbs) int32."""
+    return jnp.zeros((*shape, spec.num_limbs), dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Product entry: quantize an exact product onto the grid, as limb contributions
+# ---------------------------------------------------------------------------
+def product_limbs(spec: AccumulatorSpec, a: Decoded, b: Decoded) -> Array:
+    """Exact limb contributions of the products a*b (elementwise), quantized
+    at 2^lsb per ``spec.round_mode``. Result: int32 (*batch, num_limbs); each
+    limb's magnitude is < 2^17, so up to SAFE_CHUNK results may be summed
+    before ``carry_normalize``.
+
+    The significand product is computed exactly in int32 via 12-bit digit
+    splitting (24x24 -> 48 bits as three 16-bit digits), then aligned to the
+    grid with a uniform shift. Dropping the bits below position 0 of the
+    aligned non-negative magnitude implements round-toward-zero of the signed
+    product exactly.
+    """
+    L = spec.num_limbs
+    # --- exact 48-bit significand product as three 16-bit digits ----------
+    a_hi, a_lo = a.mant >> 12, a.mant & 0xFFF
+    b_hi, b_lo = b.mant >> 12, b.mant & 0xFFF
+    p0 = a_lo * b_lo                      # weight 2^0 , < 2^24
+    p1 = a_lo * b_hi + a_hi * b_lo        # weight 2^12, < 2^25
+    p2 = a_hi * b_hi                      # weight 2^24, < 2^24
+    # digits of m = p0 + p1*2^12 + p2*2^24 in base 2^16 (exact carries)
+    d0_raw = (p0 & 0xFFFF) + ((p1 & 0xF) << 12)
+    d1_raw = (p0 >> 16) + ((p1 >> 4) & 0xFFFF) + ((p2 & 0xFF) << 8)
+    d2_raw = (p1 >> 20) + (p2 >> 8)
+    c0 = d0_raw >> 16
+    d0 = d0_raw & 0xFFFF
+    d1_raw = d1_raw + c0
+    c1 = d1_raw >> 16
+    d1 = d1_raw & 0xFFFF
+    d2 = d2_raw + c1                      # < 2^17 is fine (top digit)
+    digits = jnp.stack([d0, d1, d2], axis=-1)            # (*batch, 3)
+
+    e_prod = a.exp + b.exp                                # exponent of digit 0
+    q = e_prod - spec.lsb                                 # grid bit offset
+    sign = 1 - 2 * (a.sign ^ b.sign)                      # +1 / -1
+
+    limbs = _place_digits(digits, q, sign, L, spec)
+    # zero / special handling: zero mantissa -> all-zero contribution already.
+    return limbs
+
+
+def _place_digits(digits: Array, q: Array, sign: Array, L: int,
+                  spec: AccumulatorSpec) -> Array:
+    """Place base-2^16 ``digits`` (non-negative, weight 2^(16k)) at grid bit
+    offset ``q`` into L limbs, truncating below limb 0 (toward zero), with
+    optional RNE correction, then apply ``sign``."""
+    nd = digits.shape[-1]
+    j0 = jnp.floor_divide(q, LIMB_BITS)                   # limb of digit 0
+    r = q - j0 * LIMB_BITS                                # 0..15 sub-shift
+    r = r.astype(jnp.int32)
+    shifted_lo = jnp.left_shift(digits, r[..., None]) & LIMB_MASK
+    shifted_hi = jnp.right_shift(jnp.left_shift(digits, r[..., None]), LIMB_BITS)
+    # digit k contributes shifted_lo[k] at limb j0+k and shifted_hi[k] at j0+k+1
+    out = jnp.zeros((*digits.shape[:-1], L), dtype=jnp.int32)
+    for k in range(nd):
+        for off, part in ((k, shifted_lo[..., k]), (k + 1, shifted_hi[..., k])):
+            idx = j0 + off
+            onehot = (idx[..., None] == jnp.arange(L, dtype=jnp.int32))
+            out = out + jnp.where(onehot, part[..., None], 0)
+    if spec.round_mode == "rne":
+        out = out + _rne_correction(digits, q, L)
+    out = out * sign[..., None]
+    return out
+
+
+def _rne_correction(digits: Array, q: Array, L: int) -> Array:
+    """+1 ulp correction for round-to-nearest-even at the grid lsb.
+
+    guard = product bit at grid position -1, sticky = OR of bits below,
+    lsb_bit = product bit at position 0 (pre-round). Correction applies to
+    limb 0 (as magnitude; caller multiplies by sign afterwards, which matches
+    round-half-away-from-zero-on-ties-odd — for RNE of the magnitude this is
+    correct since negation of an RNE-magnitude equals RNE of the negation).
+    """
+    nd = digits.shape[-1]
+    # bit at absolute product position p (0 <= p < 16*nd): p relative to grid = q + p
+    # guard: grid pos -1 -> product bit pb = -1 - q ; valid if 0 <= pb < 16*nd
+    def product_bit(pb):
+        k = jnp.floor_divide(pb, LIMB_BITS)
+        s = pb - k * LIMB_BITS
+        val = jnp.zeros(pb.shape, jnp.int32)
+        for kk in range(nd):
+            val = val + jnp.where(k == kk,
+                                  jnp.right_shift(digits[..., kk], s) & 1, 0)
+        return jnp.where((pb >= 0) & (pb < LIMB_BITS * nd), val, 0)
+
+    def bits_below(pb):   # OR of product bits strictly below pb
+        any_below = jnp.zeros(pb.shape, jnp.bool_)
+        for kk in range(nd):
+            lo = pb - kk * LIMB_BITS     # bits of digit kk strictly below pb
+            nbits = jnp.clip(lo, 0, LIMB_BITS)
+            mask = jnp.left_shift(1, nbits) - 1
+            any_below = any_below | ((digits[..., kk] & mask) != 0)
+        return any_below
+
+    pb_guard = -1 - q
+    guard = product_bit(pb_guard)
+    sticky = bits_below(pb_guard)
+    lsb_bit = product_bit(-q)
+    # entirely-below-grid products: guard position above all digits -> pb_guard >= 16nd
+    # handled by product_bit bounds (guard=0 -> no correction; trunc-like).
+    inc = (guard == 1) & (sticky | (lsb_bit == 1))
+    corr = jnp.zeros((*digits.shape[:-1], L), dtype=jnp.int32)
+    corr = corr.at[..., 0].set(inc.astype(jnp.int32))
+    return corr
+
+
+# ---------------------------------------------------------------------------
+# Carry normalization, wrap/saturate, read-out
+# ---------------------------------------------------------------------------
+def carry_normalize(spec: AccumulatorSpec, limbs: Array) -> Array:
+    """Propagate carries so limbs 0..L-2 are in [0, 2^16); the top limb keeps
+    the full signed remainder (NOT masked to W bits).
+
+    Keeping the intermediate state exact in the extended (16L + int32
+    headroom)-bit range makes the result independent of chunk/block
+    boundaries; the W-bit wrap/saturation is applied ONCE at read-out
+    (``finalize``/``to_float``), which for wrap is equivalent (mod-2^W is a
+    ring homomorphism) and for saturate is the only order-invariant
+    definition."""
+    L = spec.num_limbs
+    out = []
+    carry = jnp.zeros(limbs.shape[:-1], dtype=jnp.int32)
+    for l in range(L - 1):
+        t = limbs[..., l] + carry
+        carry = jnp.right_shift(t, LIMB_BITS)      # arithmetic shift = floor
+        out.append(t & LIMB_MASK)
+    out.append(limbs[..., L - 1] + carry)          # top limb: full int32
+    return jnp.stack(out, axis=-1)
+
+
+def finalize(spec: AccumulatorSpec, limbs: Array) -> Array:
+    """Apply the register's W-bit wrap or saturation to a carry-normalized
+    state (read-out step)."""
+    L = spec.num_limbs
+    return _apply_overflow(spec, limbs, limbs[..., L - 1])
+
+
+def _apply_overflow(spec: AccumulatorSpec, norm: Array, top: Array) -> Array:
+    """Wrap or saturate the register at W bits (two's complement)."""
+    L, W = spec.num_limbs, spec.width
+    top_bits = W - LIMB_BITS * (L - 1)              # 1..16 significant top bits
+    # wrap: sign-extend the top limb from top_bits
+    shift = 32 - top_bits
+    wrapped_top = jnp.right_shift(jnp.left_shift(top, shift), shift)
+    if spec.overflow_mode == "wrap":
+        return jnp.concatenate([norm[..., :L - 1], wrapped_top[..., None]], axis=-1)
+    # saturate: detect overflow (top limb outside signed top_bits range)
+    lo, hi = -(1 << (top_bits - 1)), (1 << (top_bits - 1)) - 1
+    over = top > hi
+    under = top < lo
+    sat_hi = jnp.full(norm.shape[:-1] + (L,), LIMB_MASK, jnp.int32)
+    sat_hi = sat_hi.at[..., L - 1].set(hi)
+    sat_lo = jnp.zeros(norm.shape[:-1] + (L,), jnp.int32)
+    sat_lo = sat_lo.at[..., L - 1].set(lo)
+    base = jnp.concatenate([norm[..., :L - 1],
+                            jnp.clip(top, lo, hi)[..., None]], axis=-1)
+    base = jnp.where(over[..., None], sat_hi, base)
+    base = jnp.where(under[..., None], sat_lo, base)
+    return base
+
+
+def add(spec: AccumulatorSpec, acc: Array, contributions: Array) -> Array:
+    """Exact add of limb contributions (no normalization)."""
+    del spec
+    return acc + contributions
+
+
+def to_float(spec: AccumulatorSpec, limbs: Array, out_precision: int = 24) -> Array:
+    """Round the accumulator ONCE to a float (RNE at ``out_precision`` bits)
+    and return f32. ``limbs`` must be carry-normalized. Exact for
+    out_precision <= 24."""
+    L = spec.num_limbs
+    limbs = finalize(spec, limbs)
+    sign_neg = limbs[..., L - 1] < 0
+    # magnitude digits: conditional two's-complement negate across limbs
+    mag = _negate_where(limbs, sign_neg)
+    # position of highest set bit
+    any_nz = jnp.any(mag != 0, axis=-1)
+    top_idx = jnp.zeros(mag.shape[:-1], jnp.int32)
+    for l in range(L):
+        top_idx = jnp.where(mag[..., l] != 0, l, top_idx)
+    top_val = jnp.take_along_axis(mag, top_idx[..., None], axis=-1)[..., 0]
+    hb = _ilog2(jnp.maximum(top_val, 1)) + top_idx * LIMB_BITS  # highest bit pos
+    # extract out_precision bits [hb-p+1 .. hb], guard at hb-p, sticky below
+    p = out_precision
+    take_from = hb - p + 1                                      # may be < 0
+    mant = _extract_bits(mag, take_from, p)
+    guard = _extract_bits(mag, take_from - 1, 1)
+    sticky = _any_below(mag, take_from - 2)   # strictly below the guard bit
+    rnd = (guard == 1) & (sticky | ((mant & 1) == 1))
+    mant = mant + rnd.astype(jnp.int32)
+    # mantissa overflow (2^p) -> exact power of two, bump exponent
+    ovf = mant == (1 << p)
+    mant = jnp.where(ovf, 1 << (p - 1), mant)
+    exp = take_from + spec.lsb + jnp.where(ovf, 1, 0)
+    v = jnp.ldexp(mant.astype(jnp.float32), exp)
+    v = jnp.where(sign_neg, -v, v)
+    return jnp.where(any_nz, v, jnp.float32(0.0))
+
+
+def to_float64(spec: AccumulatorSpec, limbs: Array) -> Array:
+    """Round the accumulator ONCE to float64 (53-bit RNE). Requires x64 to be
+    enabled (benchmark processes); the mantissa is assembled from two int32
+    pieces so the limb algebra itself stays int32/TPU-shaped."""
+    L = spec.num_limbs
+    limbs = finalize(spec, limbs)
+    sign_neg = limbs[..., L - 1] < 0
+    mag = _negate_where(limbs, sign_neg)
+    any_nz = jnp.any(mag != 0, axis=-1)
+    top_idx = jnp.zeros(mag.shape[:-1], jnp.int32)
+    for l in range(L):
+        top_idx = jnp.where(mag[..., l] != 0, l, top_idx)
+    top_val = jnp.take_along_axis(mag, top_idx[..., None], axis=-1)[..., 0]
+    hb = _ilog2(jnp.maximum(top_val, 1)) + top_idx * LIMB_BITS
+    p = 53
+    take_from = hb - p + 1
+    lo_bits = 29
+    hi = _extract_bits(mag, take_from + lo_bits, p - lo_bits)   # 24 bits
+    lo = _extract_bits(mag, take_from, lo_bits)                 # 29 bits
+    guard = _extract_bits(mag, take_from - 1, 1)
+    sticky = _any_below(mag, take_from - 2)
+    mant = hi.astype(jnp.float64) * (1 << lo_bits) + lo.astype(jnp.float64)
+    rnd = (guard == 1) & (sticky | ((lo & 1) == 1))
+    mant = mant + rnd.astype(jnp.float64)
+    v = jnp.ldexp(mant, take_from + spec.lsb)
+    v = jnp.where(sign_neg, -v, v)
+    return jnp.where(any_nz, v, jnp.float64(0.0))
+
+
+def _negate_where(limbs: Array, cond: Array) -> Array:
+    """Two's-complement negate across base-2^16 limbs where ``cond``.
+
+    Input must be carry-normalized (digits 0..L-2 in [0,2^16), top limb a
+    small signed value). Output where cond: magnitude digits, all in
+    [0, 2^16)."""
+    L = limbs.shape[-1]
+    out = []
+    borrow = jnp.zeros(limbs.shape[:-1], jnp.int32)
+    for l in range(L):
+        t = -limbs[..., l] - borrow
+        neg = (t < 0).astype(jnp.int32)
+        t = t + neg * (1 << LIMB_BITS)
+        borrow = neg
+        out.append(t)
+    negated = jnp.stack(out, axis=-1)
+    return jnp.where(cond[..., None], negated, limbs)
+
+
+def _canon(limbs: Array) -> Array:
+    """Canonicalize a normalized non-negative register to digits in [0,2^16).
+    (After carry_normalize, limbs 0..L-2 already are; the top limb of a
+    non-negative value is >= 0 and < 2^16 by width.)"""
+    return limbs
+
+
+def _extract_bits(mag: Array, start: Array, nbits: int) -> Array:
+    """Bits [start, start+nbits) of the magnitude register as int32.
+    start may be negative (those bits read as 0). nbits <= 24."""
+    # value >> start, truncated to nbits: gathered from 3 adjacent limbs.
+    j = jnp.floor_divide(start, LIMB_BITS)
+    s = start - j * LIMB_BITS                     # 0..15
+    part0 = jnp.right_shift(_limb_at(mag, j), s)
+    part1 = jnp.left_shift(_limb_at(mag, j + 1), LIMB_BITS - s)
+    # part2 only matters when s > 8 (bits 32-s .. < 24); clamp the shift.
+    sh2 = jnp.clip(2 * LIMB_BITS - s, 0, 31)
+    part2 = jnp.where(s > 2 * LIMB_BITS - nbits,
+                      jnp.left_shift(_limb_at(mag, j + 2), sh2), 0)
+    res = part0 | part1 | part2
+    return res & ((1 << nbits) - 1)
+
+
+def _limb_at(mag: Array, idx: Array) -> Array:
+    L = mag.shape[-1]
+    out = jnp.zeros(mag.shape[:-1], jnp.int32)
+    for l in range(L):
+        out = out + jnp.where(idx == l, mag[..., l], 0)
+    return jnp.where((idx >= 0) & (idx < L), out, 0)
+
+
+def _any_below(mag: Array, below: Array) -> Array:
+    """True where any magnitude bit strictly below position ``below``+1 is set
+    — i.e. bits [0, below] inclusive... (sticky for positions < take_from-? )
+    Concretely: OR of bits at positions <= below."""
+    L = mag.shape[-1]
+    any_set = jnp.zeros(mag.shape[:-1], jnp.bool_)
+    for l in range(L):
+        lo = below + 1 - l * LIMB_BITS            # #bits of limb l at pos <= below
+        nbits = jnp.clip(lo, 0, LIMB_BITS)
+        mask = jnp.left_shift(1, nbits) - 1
+        any_set = any_set | ((mag[..., l] & mask) != 0)
+    return any_set
+
+
+def value_as_float2(spec: AccumulatorSpec, limbs: Array) -> tuple[Array, Array]:
+    """Lossier helper: accumulator value as a head+tail f32 pair (for quick
+    diagnostics; NOT used in correctness paths)."""
+    L = spec.num_limbs
+    scale = [jnp.float32(2.0) ** (spec.lsb + LIMB_BITS * l) for l in range(L)]
+    hi = jnp.zeros(limbs.shape[:-1], jnp.float32)
+    for l in reversed(range(L)):
+        hi = hi + limbs[..., l].astype(jnp.float32) * scale[l]
+    return hi, jnp.zeros_like(hi)

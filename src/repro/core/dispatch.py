@@ -1,0 +1,199 @@
+"""BLAS-style transparent dispatch — the OpenBLAS-swap analogue.
+
+High-level model code never calls ``jnp.dot`` directly; it calls
+``repro.core.dispatch.gemm(a, b, site="attn_qk")``.  A ``NumericsPolicy``
+(installed via context manager, like re-linking OpenBLAS at runtime) maps each
+*call-site* to a ``GemmConfig`` ⟨format, accumulator, execution target⟩, so an
+unmodified model can be re-run under any numerics without touching its code —
+the paper's "runtime execution flow".
+
+Modes:
+    native   - MXU fast path: inputs cast to the format's dtype,
+               jnp.dot(..., preferred_element_type=f32). Default everywhere;
+               this is what the multi-pod dry-run lowers.
+    simulate - bit-exact ⟨ovf,msb,lsb⟩ FDP (repro.core.fdp).
+    pallas   - the Pallas TPU kernel (interpret on CPU).
+
+Batched inputs (ndim > 2) are supported in all modes (simulate/pallas vmap
+over leading dims; native uses dot_general via jnp.matmul semantics).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .accumulator import AccumulatorSpec
+from .formats import BF16, FP32, FloatFormat, PositFormat, get_format
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmConfig:
+    fmt: FloatFormat | PositFormat = BF16
+    acc: Optional[AccumulatorSpec] = None      # None => native fp32 accumulate
+    mode: str = "native"                       # native | simulate | pallas
+
+    def __post_init__(self):
+        if self.mode not in ("native", "simulate", "pallas"):
+            raise ValueError(self.mode)
+        if self.mode != "native" and self.acc is None:
+            raise ValueError(f"mode={self.mode} requires an AccumulatorSpec")
+
+    def tag(self) -> str:
+        acc = (f"<{self.acc.ovf},{self.acc.msb},{self.acc.lsb}>"
+               if self.acc else "fp32acc")
+        return f"{self.fmt.name}/{acc}/{self.mode}"
+
+
+@dataclasses.dataclass(frozen=True)
+class NumericsPolicy:
+    """Call-site -> GemmConfig mapping. ``default`` covers unlisted sites.
+    Site keys support trailing-* prefix matching ("attn_*")."""
+
+    default: GemmConfig = GemmConfig()
+    overrides: tuple = ()                      # tuple[(pattern, GemmConfig)]
+    name: str = "default"
+
+    def lookup(self, site: str) -> GemmConfig:
+        for pat, cfg in self.overrides:
+            if pat == site:
+                return cfg
+        for pat, cfg in self.overrides:
+            if pat.endswith("*") and site.startswith(pat[:-1]):
+                return cfg
+        return self.default
+
+    def with_override(self, pattern: str, cfg: GemmConfig) -> "NumericsPolicy":
+        return dataclasses.replace(
+            self, overrides=((pattern, cfg),) + tuple(self.overrides))
+
+
+MXU_BF16 = NumericsPolicy(GemmConfig(BF16, None, "native"), name="mxu_bf16")
+MXU_FP32 = NumericsPolicy(GemmConfig(FP32, None, "native"), name="mxu_fp32")
+
+_state = threading.local()
+
+
+def current_policy() -> NumericsPolicy:
+    return getattr(_state, "policy", MXU_BF16)
+
+
+@contextlib.contextmanager
+def use_policy(policy: NumericsPolicy):
+    """Swap the process-wide numerics (the LD_PRELOAD moment)."""
+    prev = current_policy()
+    _state.policy = policy
+    try:
+        yield policy
+    finally:
+        _state.policy = prev
+
+
+_SITES_SEEN: set = set()
+
+
+def sites_seen() -> frozenset:
+    """All GEMM call-sites traced so far (introspection/report)."""
+    return frozenset(_SITES_SEEN)
+
+
+def gemm(a: Array, b: Array, *, site: str = "generic",
+         policy: Optional[NumericsPolicy] = None) -> Array:
+    """Policy-dispatched matmul. Contracts a's last dim with b's second-to-last
+    (jnp.matmul semantics). Output f32 (simulate/pallas) or f32/bf16 (native,
+    preferred_element_type=f32 then cast by caller if desired)."""
+    pol = policy or current_policy()
+    cfg = pol.lookup(site)
+    _SITES_SEEN.add(site)
+
+    if cfg.mode == "native":
+        dt = cfg.fmt.jnp_dtype
+        return jnp.matmul(a.astype(dt), b.astype(dt),
+                          preferred_element_type=jnp.float32)
+
+    if cfg.mode == "simulate":
+        from . import fdp
+        f = lambda x, y: fdp.fdp_gemm(x, y, cfg.acc, cfg.fmt)
+    else:  # pallas
+        from repro.kernels import ops as kops
+        f = lambda x, y: kops.fdp_gemm(x, y, spec=cfg.acc, fmt=cfg.fmt)
+
+    return _batched_apply(f, a, b)
+
+
+def _batched_apply(f, a: Array, b: Array) -> Array:
+    """Apply a 2D (M,K)x(K,N) kernel over arbitrary leading batch dims with
+    numpy broadcasting between a and b batch dims."""
+    if a.ndim == 1:
+        a = a[None, :]
+        out = _batched_apply(f, a, b)
+        return out[..., 0, :]
+    if b.ndim == 1:
+        b = b[:, None]
+        out = _batched_apply(f, a, b)
+        return out[..., :, 0]
+    if a.ndim == 2 and b.ndim == 2:
+        return f(a, b)
+    # broadcast batch dims
+    batch = jnp.broadcast_shapes(a.shape[:-2], b.shape[:-2])
+    a = jnp.broadcast_to(a, batch + a.shape[-2:])
+    b = jnp.broadcast_to(b, batch + b.shape[-2:])
+    af = a.reshape((-1,) + a.shape[-2:])
+    bf = b.reshape((-1,) + b.shape[-2:])
+    out = jax.vmap(f)(af, bf)
+    return out.reshape(batch + out.shape[-2:])
+
+
+def grouped_qk(q: Array, k: Array, *, site: str = "attn_qk",
+               policy: Optional[NumericsPolicy] = None) -> Array:
+    """GQA score einsum  q (B,Kh,G,Sq,hd) x k (B,Kh,Sk,hd) -> (B,Kh,G,Sq,Sk).
+
+    Native mode uses a real einsum so sequence-parallel sharding on Sq
+    survives (a reshape that merges (G, Sq) would force XLA to replicate the
+    sequence dim). Simulate/pallas modes vmap the 2D FDP kernel."""
+    pol = policy or current_policy()
+    cfg = pol.lookup(site)
+    _SITES_SEEN.add(site)
+    if cfg.mode == "native":
+        dt = cfg.fmt.jnp_dtype
+        return jnp.einsum("bkgqd,bksd->bkgqs", q.astype(dt), k.astype(dt),
+                          preferred_element_type=jnp.float32)
+    B, Kh, G, Sq, hd = q.shape
+    qf = q.reshape(B, Kh, G * Sq, hd)
+    out = gemm(qf, jnp.swapaxes(k, -1, -2), site=site, policy=pol)
+    return out.reshape(B, Kh, G, Sq, k.shape[2])
+
+
+def grouped_av(p: Array, v: Array, *, site: str = "attn_av",
+               policy: Optional[NumericsPolicy] = None) -> Array:
+    """GQA value einsum  p (B,Kh,G,Sq,Sk) x v (B,Kh,Sk,hd) -> (B,Kh,G,Sq,hd)."""
+    pol = policy or current_policy()
+    cfg = pol.lookup(site)
+    _SITES_SEEN.add(site)
+    if cfg.mode == "native":
+        dt = cfg.fmt.jnp_dtype
+        return jnp.einsum("bkgqs,bksd->bkgqd", p.astype(dt), v.astype(dt),
+                          preferred_element_type=jnp.float32)
+    B, Kh, G, Sq, Sk = p.shape
+    pf = p.reshape(B, Kh, G * Sq, Sk)
+    out = gemm(pf, v, site=site, policy=pol)
+    return out.reshape(B, Kh, G, Sq, v.shape[-1])
+
+
+def quantize_inputs(x: Array, site: str = "generic",
+                    policy: Optional[NumericsPolicy] = None) -> Array:
+    """Round an activation/weight onto the policy format's grid (keeps f32
+    carrier for posit formats)."""
+    pol = policy or current_policy()
+    cfg = pol.lookup(site)
+    fmt = cfg.fmt
+    if isinstance(fmt, PositFormat):
+        return fmt.to_float(fmt.from_float(x))
+    return x.astype(fmt.jnp_dtype).astype(x.dtype)

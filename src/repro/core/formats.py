@@ -1,0 +1,239 @@
+"""Computer-format front end of the FDP datapath.
+
+The paper's generator is *format agnostic*: IEEE-754, bfloat16 and posit inputs
+are all decoded to a (sign, integer-significand, exponent) triple before their
+products enter the fixed-point accumulator.  This module is the JAX/TPU
+equivalent of that decode stage: branch-free integer bit manipulation
+(``lax.bitcast_convert_type`` + shifts/masks) that lowers both in plain XLA and
+inside Pallas kernel bodies.
+
+Conventions
+-----------
+``decode(x) -> Decoded(sign, mant, exp)`` with value ``(-1)^sign * mant * 2^exp``
+where ``mant`` is an int32 in ``[0, 2^precision)`` (zero for ±0) and the triple
+is exact for every finite input including subnormals.  ``precision`` counts the
+implicit bit (24 for fp32, 8 for bf16, 11 for fp16).  NaN/Inf are flagged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+
+_U1 = lambda: jnp.uint32(1)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Decoded:
+    """Exact (sign, mantissa, exponent) decomposition: (-1)^s * m * 2^e."""
+
+    sign: Array      # int32, 0 or 1
+    mant: Array      # int32, 0 <= m < 2^precision (0 iff value == 0)
+    exp: Array       # int32, exponent of the *integer* mantissa
+    is_nan: Array    # bool
+    is_inf: Array    # bool
+
+    def tree_flatten(self):
+        return (self.sign, self.mant, self.exp, self.is_nan, self.is_inf), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _clz32(x: Array) -> Array:
+    """Count leading zeros of a 32-bit value (branch-free binary search)."""
+    x = x.astype(jnp.uint32)
+    c = jnp.zeros(x.shape, dtype=jnp.int32)
+    for shift in (16, 8, 4, 2, 1):
+        y = jnp.right_shift(x, jnp.uint32(shift))
+        move = y != 0
+        c = c + jnp.where(move, shift, 0)
+        x = jnp.where(move, y, x)
+    return jnp.where(x == 0, 32, 31 - c).astype(jnp.int32)
+
+
+def _ilog2(m: Array) -> Array:
+    """floor(log2(m)) for positive values (int32 domain)."""
+    return 31 - _clz32(m.astype(jnp.uint32))
+
+
+@dataclasses.dataclass(frozen=True)
+class FloatFormat:
+    """An IEEE-754-style binary interchange format (≤ 32 bits wide)."""
+
+    name: str
+    exp_bits: int
+    mant_bits: int          # explicit fraction bits (no implicit bit)
+    jnp_dtype: object
+
+    @property
+    def precision(self) -> int:       # significand incl. implicit bit
+        return self.mant_bits + 1
+
+    @property
+    def bias(self) -> int:
+        return (1 << (self.exp_bits - 1)) - 1
+
+    @property
+    def emax(self) -> int:
+        return self.bias
+
+    @property
+    def emin(self) -> int:           # min normal exponent
+        return 1 - self.bias
+
+    def decode(self, x: Array) -> Decoded:
+        """Exact (sign, mant, exp). Input is upcast to f32 (exact for every
+        format narrower than f32), then decoded with integer bit ops."""
+        xf = x.astype(jnp.float32)
+        bits = lax.bitcast_convert_type(xf, jnp.uint32)
+        sign = (jnp.right_shift(bits, jnp.uint32(31)) & 1).astype(jnp.int32)
+        biased = (jnp.right_shift(bits, jnp.uint32(23)) & 0xFF).astype(jnp.int32)
+        frac = (bits & 0x7FFFFF).astype(jnp.int32)
+        is_sub = biased == 0
+        is_special = biased == 0xFF
+        mant = jnp.where(is_sub, frac, frac | (1 << 23))
+        exp = jnp.where(is_sub, -126 - 23, biased - 127 - 23)
+        mant = jnp.where(is_special, 0, mant).astype(jnp.int32)
+        is_nan = is_special & (frac != 0)
+        is_inf = is_special & (frac == 0)
+        return Decoded(sign, mant, exp.astype(jnp.int32), is_nan, is_inf)
+
+    def quantize(self, x: Array) -> Array:
+        """Round an f32 array onto this format's grid and return it as f32."""
+        return x.astype(jnp.float32).astype(self.jnp_dtype).astype(jnp.float32)
+
+
+FP32 = FloatFormat("ieee_fp32", 8, 23, jnp.float32)
+BF16 = FloatFormat("bfloat16", 8, 7, jnp.bfloat16)
+FP16 = FloatFormat("ieee_fp16", 5, 10, jnp.float16)
+
+
+# ---------------------------------------------------------------------------
+# Posit⟨n, es⟩ — stored as int32 bit patterns in the low ``nbits``.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PositFormat:
+    """Posit⟨nbits, es⟩ (posit standard 2022). NaR decodes to is_nan; encode
+    saturates at ±maxpos (posits have no infinities)."""
+
+    name: str
+    nbits: int
+    es: int
+
+    @property
+    def precision(self) -> int:
+        # max significand bits incl. implicit bit (minimal regime of 2 bits)
+        return max(1, self.nbits - 3 - self.es) + 1
+
+    @property
+    def jnp_dtype(self):
+        return jnp.int32  # carrier
+
+    def decode(self, p: Array) -> Decoded:
+        n, es = self.nbits, self.es
+        mask = jnp.uint32((1 << n) - 1)
+        u = p.astype(jnp.uint32) & mask
+        sign = (jnp.right_shift(u, jnp.uint32(n - 1)) & 1).astype(jnp.int32)
+        is_zero = u == 0
+        is_nar = u == jnp.uint32(1 << (n - 1))
+        body = jnp.where(sign == 1, (jnp.uint32(0) - u) & mask, u)
+        body = body & jnp.uint32((1 << (n - 1)) - 1)          # low n-1 bits
+        # regime: run of identical bits starting at bit n-2
+        aligned = jnp.left_shift(body, jnp.uint32(33 - n))    # bit n-2 -> bit 31
+        first = (jnp.right_shift(aligned, jnp.uint32(31)) & 1).astype(jnp.int32)
+        probe = jnp.where(first == 1, ~aligned, aligned)
+        run = jnp.minimum(_clz32(probe), n - 1)
+        k = jnp.where(first == 1, run - 1, -run)
+        rem = jnp.maximum(n - 1 - run - 1, 0)                 # bits for es+frac
+        tail = (body & (jnp.left_shift(jnp.uint32(1), rem.astype(jnp.uint32)) - 1)).astype(jnp.int32)
+        e_take = jnp.minimum(rem, es)
+        e_bits = jnp.right_shift(tail, rem - e_take)
+        e_val = jnp.left_shift(e_bits, es - e_take)           # missing low e bits = 0
+        f_bits = rem - e_take
+        frac = tail & (jnp.left_shift(1, f_bits) - 1)
+        mant = jnp.left_shift(1, f_bits) | frac               # 1.frac as integer
+        scale = k * (1 << es) + e_val                         # exponent of leading 1
+        exp = scale - f_bits
+        mant = jnp.where(is_zero | is_nar, 0, mant).astype(jnp.int32)
+        return Decoded(sign, mant, exp.astype(jnp.int32), is_nar,
+                       jnp.zeros_like(is_nar))
+
+    def to_float(self, p: Array) -> Array:
+        d = self.decode(p)
+        v = jnp.ldexp(d.mant.astype(jnp.float32), d.exp)
+        v = jnp.where(d.sign == 1, -v, v)
+        return jnp.where(d.is_nan, jnp.float32(jnp.nan), v)
+
+    def from_float(self, x: Array) -> Array:
+        """RNE-encode f32 → nearest posit pattern (saturating, no underflow to 0)."""
+        n, es = self.nbits, self.es
+        d = FP32.decode(x)
+        is_zero = d.mant == 0
+        # normalize integer mantissa to [2^23, 2^24)
+        up = jnp.maximum(23 - _ilog2(jnp.maximum(d.mant, 1)), 0)
+        m = jnp.left_shift(d.mant, up)
+        scale = d.exp - up + 23                                # exp of leading 1
+        k = jnp.floor_divide(scale, 1 << es)
+        e = scale - k * (1 << es)                              # in [0, 2^es)
+        run = jnp.where(k >= 0, k + 1, -k)
+        run = jnp.clip(run, 1, n - 1)
+        reg_len = jnp.minimum(run + 1, n - 1)                  # incl. terminator
+        rem = n - 1 - reg_len                                  # bits for e+frac
+        e_take = jnp.minimum(rem, es)
+        f_bits = jnp.maximum(rem - es, 0)
+        # combined (es+23)-bit stream of exponent+fraction bits
+        frac23 = (m & ((1 << 23) - 1)).astype(jnp.uint32)
+        stream = jnp.left_shift(e.astype(jnp.uint32), jnp.uint32(23)) | frac23
+        t = (es + 23) - (e_take + f_bits)                      # dropped low bits
+        # t < 0 means the posit has more fraction bits than the f32 source:
+        # zero-pad on the right instead of shifting by a negative amount.
+        tpos = jnp.maximum(t, 0).astype(jnp.uint32)
+        tneg = jnp.maximum(-t, 0).astype(jnp.uint32)
+        taken = jnp.where(t >= 0,
+                          jnp.right_shift(stream, tpos),
+                          jnp.left_shift(stream, tneg))
+        guard = jnp.where(
+            t >= 1,
+            jnp.right_shift(stream, jnp.maximum(t - 1, 0).astype(jnp.uint32)) & 1,
+            jnp.uint32(0))
+        sticky = jnp.where(
+            t >= 1,
+            (stream & (jnp.left_shift(jnp.uint32(1),
+                                      jnp.maximum(t - 1, 0).astype(jnp.uint32)) - 1)) != 0,
+            False)
+        # regime field bits (within low n-1): run ones+0 (k>=0) / run zeros+1 (k<0)
+        ones = jnp.left_shift(jnp.uint32(1), run.astype(jnp.uint32)) - 1
+        reg_bits = jnp.where(k >= 0,
+                             jnp.left_shift(ones, (reg_len - run).astype(jnp.uint32)),
+                             jnp.where(reg_len > run, jnp.uint32(1), jnp.uint32(0)))
+        body = jnp.left_shift(reg_bits, rem.astype(jnp.uint32)) | taken
+        rnd = (guard == 1) & (sticky | ((body & 1) == 1))
+        body = body + jnp.where(rnd, jnp.uint32(1), jnp.uint32(0))
+        maxpos = jnp.uint32((1 << (n - 1)) - 1)
+        body = jnp.clip(body, jnp.uint32(1), maxpos)           # saturate, no flush to 0
+        mask = jnp.uint32((1 << n) - 1)
+        patt = jnp.where(d.sign == 1, (jnp.uint32(0) - body) & mask, body)
+        patt = jnp.where(is_zero, jnp.uint32(0), patt)
+        patt = jnp.where(d.is_nan | d.is_inf, jnp.uint32(1 << (n - 1)), patt)
+        return patt.astype(jnp.int32)
+
+
+POSIT16_1 = PositFormat("posit16_1", 16, 1)
+POSIT32_2 = PositFormat("posit32_2", 32, 2)
+POSIT8_0 = PositFormat("posit8_0", 8, 0)
+
+FORMATS = {
+    f.name: f for f in (FP32, BF16, FP16, POSIT16_1, POSIT32_2, POSIT8_0)
+}
+
+
+def get_format(name: str):
+    return FORMATS[name]

@@ -1,0 +1,112 @@
+"""The kernel *generator* — the flopoco analogue.
+
+``generate_gemm(spec, fmt, target)`` returns a compiled GEMM callable plus a
+flopoco-style datapath report (resource estimate, power, tiling).  Targets:
+
+    * ``simulate`` — pure-jnp bit-exact FDP (repro.core.fdp)
+    * ``pallas``   — the Pallas TPU kernel (repro.kernels), interpret=True off-TPU
+    * ``native``   — jnp.dot with fp32 accumulation (the MXU fast path;
+                     the "conventional FPU" point in the design space)
+
+The report mirrors what flopoco prints after pipelining a datapath for a
+(chip, frequency) pair: here the "chip" is a TPU core and the resources are
+limb counts / int-op counts / VMEM bytes / modeled watts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import energy
+from .accumulator import AccumulatorSpec, LIMB_BITS
+from .formats import FP32, FloatFormat, PositFormat, get_format
+
+
+@dataclasses.dataclass(frozen=True)
+class DatapathReport:
+    """What the generator 'synthesized' (flopoco report analogue)."""
+
+    name: str
+    fmt: str
+    spec: AccumulatorSpec
+    target: str
+    num_limbs: int
+    digit_mults_per_mac: int        # 12x12 partial products per MAC
+    int_ops_per_mac: int
+    vmem_bytes_per_tile: int
+    tile: tuple
+    watts_fpga_model: float         # VU3P-calibrated model
+    pj_per_mac_tpu_model: float
+
+    def describe(self) -> str:
+        return (f"[generator] {self.name}: fmt={self.fmt} {self.spec.describe()} "
+                f"target={self.target} tile={self.tile} "
+                f"limbs={self.num_limbs} vmem/tile={self.vmem_bytes_per_tile}B "
+                f"P_model={self.watts_fpga_model:.3f}W "
+                f"E_tpu={self.pj_per_mac_tpu_model:.1f}pJ/MAC")
+
+
+@dataclasses.dataclass(frozen=True)
+class GeneratedGemm:
+    fn: Callable                    # (a, b) -> f32 (M,N)
+    report: DatapathReport
+
+
+def generate_gemm(spec: AccumulatorSpec | None,
+                  fmt: FloatFormat | PositFormat | str = FP32,
+                  target: str = "simulate",
+                  tile: tuple = (128, 128, 128)) -> GeneratedGemm:
+    """Generate a GEMM kernel for a numerical spec (None = native fp32 acc)."""
+    if isinstance(fmt, str):
+        fmt = get_format(fmt)
+
+    if target == "native" or spec is None:
+        dtype = getattr(fmt, "jnp_dtype", jnp.float32)
+        if isinstance(fmt, PositFormat):
+            raise ValueError("posit inputs have no native MXU path")
+
+        @jax.jit
+        def native(a, b):
+            return jnp.dot(a.astype(dtype), b.astype(dtype),
+                           preferred_element_type=jnp.float32)
+
+        spec_eff = spec or AccumulatorSpec(ovf=8, msb=128, lsb=-126)  # ~fp32 acc
+        rep = _report("native_mxu", fmt, spec_eff, "native", tile)
+        return GeneratedGemm(native, rep)
+
+    if target == "simulate":
+        from . import fdp
+
+        fn = partial(fdp.fdp_gemm, spec=spec, fmt=fmt)
+        rep = _report("fdp_sim", fmt, spec, "simulate", tile)
+        return GeneratedGemm(jax.jit(fn), rep)
+
+    if target == "pallas":
+        from repro.kernels import ops as kops
+
+        fn = partial(kops.fdp_gemm, spec=spec, fmt=fmt,
+                     bm=tile[0], bn=tile[1], bk=tile[2])
+        rep = _report("fdp_pallas", fmt, spec, "pallas", tile)
+        return GeneratedGemm(fn, rep)
+
+    raise ValueError(f"unknown target {target!r}")
+
+
+def _report(name, fmt, spec, target, tile):
+    digits = -(-fmt.precision // 12)
+    L = spec.num_limbs
+    int_ops = digits * digits + 2 * digits * L + L
+    bm, bn, bk = tile
+    vmem = (bm * bk + bk * bn) * 4 + bm * bn * L * 4
+    return DatapathReport(
+        name=name, fmt=fmt.name, spec=spec, target=target,
+        num_limbs=L, digit_mults_per_mac=digits * digits,
+        int_ops_per_mac=int_ops, vmem_bytes_per_tile=vmem, tile=tile,
+        watts_fpga_model=energy.spec_power(fmt, spec).watts,
+        pj_per_mac_tpu_model=energy.tpu_fdp_pj_per_mac(fmt.precision, L),
+    )

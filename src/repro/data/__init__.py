@@ -1,0 +1,2 @@
+from .synthetic import SyntheticLM, TokenBatch
+from .conditioned import gen_dot

@@ -1,0 +1,65 @@
+"""Ill-conditioned dot-product generator (Ogita, Rump & Oishi, SIAM J. Sci.
+Comput. 2005, Algorithm 6.1) — the standard way to manufacture dot products
+with a prescribed condition number.  This is the data substrate for the SSH
+reproducibility experiment (paper Fig. 2): SSH reduces to long dot products
+whose conditioning grows with vector size.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def gen_dot(n: int, cond: float, seed: int = 0):
+    """Generate f32 vectors a, b (length n) with cond(a·b) ≈ ``cond``.
+
+    Returns (a, b, exact) with ``exact`` the dot product evaluated with
+    exact (Fraction) arithmetic, as float64.
+    """
+    assert n >= 6
+    rng = np.random.default_rng(seed)
+    half = n // 2
+    b_exp = np.log2(cond) / 2.0
+    # first half: exponents spread from 0 up to b_exp/... (ORO 6.1)
+    e = np.rint(rng.uniform(0, b_exp, half)).astype(np.int64)
+    e[0] = int(np.rint(b_exp)) + 1
+    e[-1] = 0
+    a = np.float32((rng.uniform(-1, 1, half)) * (2.0 ** e))
+    x = np.float32((rng.uniform(-1, 1, half)) * (2.0 ** e))
+    # second half: cancel progressively so the true value is tiny
+    e2 = np.rint(np.linspace(int(np.rint(b_exp)), 0, n - half)).astype(np.int64)
+    a2 = np.zeros(n - half, np.float32)
+    x2 = np.zeros(n - half, np.float32)
+    from fractions import Fraction
+    acc = _exact_dot(a, x)
+    for i in range(n - half):
+        a2[i] = np.float32(rng.uniform(-1, 1) * 2.0 ** e2[i])
+        if a2[i] == 0:
+            a2[i] = np.float32(2.0 ** e2[i])
+        # choose x2 to cancel the running exact sum
+        x2[i] = np.float32(float(-acc / Fraction(np.float64(a2[i]))))
+        acc += Fraction(np.float64(a2[i])) * Fraction(np.float64(x2[i]))
+    a_full = np.concatenate([a, a2])
+    x_full = np.concatenate([x, x2])
+    perm = rng.permutation(n)
+    a_full, x_full = a_full[perm], x_full[perm]
+    exact = float(_exact_dot(a_full, x_full))
+    return a_full, x_full, exact
+
+
+def _exact_dot(a, b):
+    from fractions import Fraction
+    s = Fraction(0)
+    for x, y in zip(np.asarray(a, np.float64).tolist(),
+                    np.asarray(b, np.float64).tolist()):
+        s += Fraction(x) * Fraction(y)
+    return s
+
+
+def ssh_surrogate_batch(n: int, cond: float, m: int = 8, seed: int = 0):
+    """A batch of m ill-conditioned dot products (the SSH stencil rows)."""
+    out = [gen_dot(n, cond, seed + i) for i in range(m)]
+    a = np.stack([o[0] for o in out])
+    b = np.stack([o[1] for o in out])
+    exact = np.array([o[2] for o in out], np.float64)
+    return a, b, exact

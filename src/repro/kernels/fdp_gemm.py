@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: GEMM with a ⟨ovf,msb,lsb⟩ fixed-point FDP accumulator.
+
+TPU adaptation of the paper's FPGA systolic GEMM (FCCM'22): the MXU cannot be
+re-wired, so the exact accumulator lives in **VMEM scratch as int32 limbs** and
+the per-product decode/align/accumulate micro-ops run on the VPU. Tiling is
+classic Pallas matmul: grid (M/bm, N/bn, K/bk) with K innermost; the limb
+register (bm, bn, L) persists in scratch across the K grid dimension and is
+rounded to f32 once, on the last K step — "never round between accumulations".
+
+Block sizes are chosen MXU/VPU-aligned (multiples of 8×128 lanes); the kernel
+is validated bit-exactly against the pure-jnp oracle (ref.py) in interpret
+mode, which executes this same body on CPU.
+
+Int32 carry discipline: each product contributes < 2^17 per limb, so a K-block
+of bk ≤ 2^13 products is safe between carry normalizations; we normalize once
+per K-block (enforced in ops.py: bk <= 4096).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import accumulator as acc
+from repro.core.accumulator import AccumulatorSpec
+from repro.core.formats import FloatFormat, PositFormat
+
+
+def fdp_gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, spec: AccumulatorSpec,
+                    fmt, bk: int, k_grid: int):
+    """Kernel body. a: (bm, bk), b: (bk, bn), o: (bm, bn) f32,
+    acc scratch: (bm, bn, L) int32."""
+    kidx = pl.program_id(2)
+
+    @pl.when(kidx == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    da = fmt.decode(a)          # fields (bm, bk)
+    db = fmt.decode(b)          # fields (bk, bn)
+
+    def body(k, limbs):
+        dak = jax.tree.map(lambda x: jax.lax.dynamic_slice_in_dim(x, k, 1, 1)[:, 0], da)
+        dbk = jax.tree.map(lambda x: jax.lax.dynamic_slice_in_dim(x, k, 1, 0)[0, :], db)
+        dak = jax.tree.map(lambda x: x[:, None], dak)     # (bm, 1)
+        dbk = jax.tree.map(lambda x: x[None, :], dbk)     # (1, bn)
+        contrib = acc.product_limbs(spec, dak, dbk)       # (bm, bn, L)
+        return limbs + contrib
+
+    limbs = jax.lax.fori_loop(0, bk, body, acc_ref[...])
+    limbs = acc.carry_normalize(spec, limbs)              # once per K block
+    acc_ref[...] = limbs
+
+    @pl.when(kidx == k_grid - 1)
+    def _emit():
+        o_ref[...] = acc.to_float(spec, acc_ref[...])
+
+
+def fdp_gemm_pallas(a: jax.Array, b: jax.Array, *, spec: AccumulatorSpec,
+                    fmt, bm: int = 128, bn: int = 128, bk: int = 512,
+                    interpret: bool = True) -> jax.Array:
+    """Raw pallas_call wrapper; shapes must be multiples of the block sizes
+    (ops.py pads). Inputs: f32/bf16 arrays, or int32 posit patterns."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    assert bk <= 4096, "bk must respect int32 carry headroom (<= 2^12)"
+    L = spec.num_limbs
+    grid = (M // bm, N // bn, K // bk)
+
+    kernel = functools.partial(
+        fdp_gemm_kernel, spec=spec, fmt=fmt, bk=bk, k_grid=grid[2])
+
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        scratch = [pltpu.VMEM((bm, bn, L), jnp.int32)]
+    except Exception:  # pragma: no cover
+        scratch = [pl.MemorySpace.ANY((bm, bn, L), jnp.int32)]
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,45 @@
+"""Jitted public wrapper around the Pallas FDP GEMM kernel.
+
+Handles non-block-multiple shapes by zero padding (exact: zero products
+contribute nothing to the fixed-point register in either rounding mode) and
+picks interpret mode automatically off-TPU.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.accumulator import AccumulatorSpec
+from repro.core.formats import FP32
+
+from .fdp_gemm import fdp_gemm_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("spec", "fmt", "bm", "bn", "bk", "interpret"))
+def fdp_gemm(a: jax.Array, b: jax.Array, *, spec: AccumulatorSpec, fmt=FP32,
+             bm: int = 32, bn: int = 32, bk: int = 128,
+             interpret: bool | None = None) -> jax.Array:
+    """GEMM with tailored FDP accumulation: (M,K)@(K,N) -> (M,N) f32."""
+    M, K = a.shape
+    _, N = b.shape
+    bm_, bn_, bk_ = min(bm, _ceil(M)), min(bn, _ceil(N)), min(bk, _ceil(K))
+    pm, pn, pk = (-M) % bm_, (-N) % bn_, (-K) % bk_
+    if pm or pk:
+        a = jnp.pad(a, ((0, pm), (0, pk)))
+    if pk or pn:
+        b = jnp.pad(b, ((0, pk), (0, pn)))
+    interp = (not _on_tpu()) if interpret is None else interpret
+    out = fdp_gemm_pallas(a, b, spec=spec, fmt=fmt, bm=bm_, bn=bn_, bk=bk_,
+                          interpret=interp)
+    return out[:M, :N]
+
+
+def _ceil(x: int, base: int = 8) -> int:
+    return -(-x // base) * base

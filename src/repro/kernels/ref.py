@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the FDP GEMM kernel.
+
+This is the normative implementation (repro.core.fdp), validated against a
+python-``Fraction`` oracle in tests/test_accumulator.py; the Pallas kernel
+must agree with it bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import fdp
+from repro.core.accumulator import AccumulatorSpec
+from repro.core.formats import FP32
+
+
+def fdp_gemm_ref(a: jax.Array, b: jax.Array, *, spec: AccumulatorSpec,
+                 fmt=FP32) -> jax.Array:
+    """(M,K) @ (K,N) -> (M,N) f32 with exact ⟨ovf,msb,lsb⟩ accumulation."""
+    return fdp.fdp_gemm(a, b, spec, fmt)

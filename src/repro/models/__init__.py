@@ -1,0 +1,5 @@
+from .config import (LONG_500K, PREFILL_32K, SHAPES, TRAIN_4K, DECODE_32K,
+                     ModelConfig, ShapeConfig, shape_applicable)
+from .layers import Distribution, LOCAL
+from .transformer import (decode_step, forward, init, init_abstract,
+                          init_cache, prefill)

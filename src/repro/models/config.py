@@ -1,0 +1,164 @@
+"""Model configuration covering all assigned architecture families."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int                  # 0 for attention-free
+    n_kv_heads: int
+    d_ff: int                     # 0 => no MLP block (pure SSM)
+    vocab_size: int
+    head_dim: Optional[int] = None          # default d_model // n_heads
+    # transformer details
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    act: str = "silu"                       # silu (GLU) | gelu (GLU)
+    norm_eps: float = 1e-5
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    # SSM (Mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    ssm_conv: int = 4
+    # hybrid (zamba2-style shared attention block)
+    attn_every: int = 0                     # 0 => not hybrid
+    # encoder-decoder (whisper)
+    n_enc_layers: int = 0
+    enc_seq: int = 0                        # fixed encoder frames
+    # vlm
+    n_patches: int = 0
+    # numerics / sizes
+    param_dtype: str = "float32"
+    # attention chunking for long sequences
+    attn_chunk: int = 1024
+
+    def __post_init__(self):
+        if self.n_heads:
+            object.__setattr__(
+                self, "head_dim", self.head_dim or self.d_model // self.n_heads)
+
+    @property
+    def d_inner(self) -> int:               # SSM inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a multiple of 32 (TP-shardable; logits for padded
+        ids are masked to -inf)."""
+        return -(-self.vocab_size // 32) * 32
+
+    def reduced(self, **over) -> "ModelConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        base = dict(
+            name=self.name + "-reduced",
+            family=self.family,
+            n_layers=min(self.n_layers, 2),
+            d_model=64,
+            n_heads=min(self.n_heads, 4) if self.n_heads else 0,
+            n_kv_heads=0,
+            d_ff=128 if self.d_ff else 0,
+            vocab_size=256,
+            head_dim=16 if self.n_heads else None,
+            qkv_bias=self.qkv_bias,
+            qk_norm=self.qk_norm,
+            act=self.act,
+            n_experts=min(self.n_experts, 4),
+            top_k=min(self.top_k, 2),
+            ssm_state=min(self.ssm_state, 16),
+            ssm_expand=self.ssm_expand,
+            ssm_head_dim=16 if self.ssm_state else 64,
+            ssm_groups=self.ssm_groups,
+            ssm_conv=self.ssm_conv,
+            attn_every=1 if self.attn_every else 0,
+            n_enc_layers=min(self.n_enc_layers, 2),
+            enc_seq=16 if self.n_enc_layers else 0,
+            n_patches=8 if self.n_patches else 0,
+            attn_chunk=32,
+        )
+        if self.n_heads:
+            base["n_kv_heads"] = min(self.n_kv_heads, base["n_heads"])
+            if self.n_kv_heads == 1:
+                base["n_kv_heads"] = 1
+        base.update(over)
+        return ModelConfig(**base)
+
+    def param_count(self) -> int:
+        """Analytical parameter count (for 6ND roofline bookkeeping)."""
+        d, f, V = self.d_model, self.d_ff, self.padded_vocab
+        n_attn = 0
+        if self.n_heads:
+            hd = self.head_dim
+            n_attn = d * (self.n_heads * hd) * 2 \
+                + d * (self.n_kv_heads * hd) * 2
+        n_mlp = 3 * d * f if f else 0
+        if self.n_experts:
+            n_mlp *= self.n_experts
+        n_ssm = 0
+        if self.ssm_state:
+            di, g, n, h = self.d_inner, self.ssm_groups, self.ssm_state, self.ssm_heads
+            n_ssm = d * di * 2 + 2 * d * g * n + d * h + di * d \
+                + self.ssm_conv * (di + 2 * g * n)
+        per_layer = {
+            "dense": n_attn + n_mlp, "moe": n_attn + n_mlp,
+            "vlm": n_attn + n_mlp, "encdec": n_attn + n_mlp,
+            "ssm": n_ssm, "hybrid": n_ssm,
+        }[self.family]
+        total = self.n_layers * per_layer
+        if self.family == "encdec":
+            # encoder layers + decoder cross-attention
+            total += self.n_enc_layers * (n_attn + n_mlp) \
+                + self.n_layers * n_attn
+        if self.family == "hybrid" and self.attn_every:
+            total += n_attn + 3 * d * f          # one shared attn+MLP block
+        total += 2 * V * d                        # embed + head
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k of n_experts)."""
+        if not self.n_experts:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        dense_moe = self.n_layers * 3 * d * f * self.n_experts
+        active_moe = self.n_layers * 3 * d * f * self.top_k
+        return self.param_count() - dense_moe + active_moe
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Which (arch x shape) dry-run cells exist (DESIGN.md §4)."""
+    if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return False, "long_500k needs sub-quadratic context (SSM/hybrid only)"
+    return True, ""

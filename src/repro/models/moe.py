@@ -1,0 +1,207 @@
+"""Mixture-of-Experts block: sort-based ragged dispatch + lax.ragged_dot.
+
+No capacity factor and no token dropping in the default (TP-MoE) path: tokens
+are sorted by expert and fed through grouped matmuls with exact ragged group
+sizes — FLOPs proportional to top_k (not n_experts), which keeps the roofline
+compute term faithful.
+
+Distribution (dist.mesh set): TP-MoE inside shard_map —
+    tokens stay sharded over the dp axes; the sequence shards (SP) are
+    all-gathered over the model axis, each model shard computes ALL local
+    tokens against its 1/TP slice of every expert's FFN, and the partial
+    outputs are reduce-scattered back to sequence shards. Collectives:
+    1 all-gather + 1 reduce-scatter per MoE layer (same as a Megatron MLP).
+
+An EP (expert-parallel, all-to-all) variant is provided for the §Perf
+comparison: ``moe_block_ep`` — each model shard owns n_experts/TP full
+experts and tokens are exchanged with two all_to_all hops.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import dispatch
+
+from .layers import Distribution, activate
+
+try:  # jax >= 0.6 exports shard_map at top level
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map
+
+
+def init_moe(key, d: int, f: int, n_experts: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    return {
+        "router": jax.random.normal(ks[0], (d, n_experts), dtype) * d ** -0.5,
+        "w_in": jax.random.normal(ks[1], (n_experts, d, f), dtype) * d ** -0.5,
+        "w_gate": jax.random.normal(ks[2], (n_experts, d, f), dtype) * d ** -0.5,
+        "w_out": jax.random.normal(ks[3], (n_experts, f, d), dtype) * f ** -0.5,
+    }
+
+
+def _route(x_flat, router_w, cfg):
+    """Top-k routing. Returns (weights (T,k) f32, ids (T,k) i32)."""
+    logits = dispatch.gemm(x_flat, router_w, site="moe_router")
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    weights, ids = jax.lax.top_k(probs, cfg.top_k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    return weights, ids.astype(jnp.int32)
+
+
+def _moe_ffn(x_sorted, group_sizes, cfg, wi, wg, wo):
+    """Grouped GLU FFN over expert-sorted tokens."""
+    h_in = jax.lax.ragged_dot(x_sorted, wi, group_sizes)
+    h_gate = jax.lax.ragged_dot(x_sorted, wg, group_sizes)
+    h = activate(h_gate, cfg.act) * h_in
+    return jax.lax.ragged_dot(h.astype(x_sorted.dtype), wo, group_sizes)
+
+
+def _moe_inner(x_flat, router_w, wi, wg, wo, cfg):
+    """Dense tokens (T, d) -> (T, d). Pure local computation."""
+    T, d = x_flat.shape
+    k = cfg.top_k
+    weights, ids = _route(x_flat, router_w, cfg)
+    flat_ids = ids.reshape(-1)                            # (T*k,)
+    order = jnp.argsort(flat_ids, stable=True)
+    token_of = order // k                                 # source token per slot
+    x_sorted = jnp.take(x_flat, token_of, axis=0)
+    group_sizes = jnp.bincount(flat_ids, length=cfg.n_experts).astype(jnp.int32)
+    out_sorted = _moe_ffn(x_sorted, group_sizes, cfg, wi, wg, wo)
+    w_sorted = jnp.take(weights.reshape(-1), order)
+    contrib = out_sorted.astype(jnp.float32) * w_sorted[:, None]
+    out = jnp.zeros((T, d), jnp.float32).at[token_of].add(contrib)
+    return out.astype(x_flat.dtype)
+
+
+def moe_block(x, p, cfg, dist: Distribution, site: str = "moe"):
+    """x: (B, S, d) -> (B, S, d). TP-MoE (see module docstring)."""
+    B, S, d = x.shape
+    if dist.mesh is None:
+        return _moe_inner(x.reshape(-1, d), p["router"], p["w_in"],
+                          p["w_gate"], p["w_out"], cfg).reshape(B, S, d)
+
+    dp, tp = dist.dp, dist.tp_axis
+    tp_size = dist.mesh.shape[tp]
+    seq_sharded = S > 1 and S % tp_size == 0
+
+    if seq_sharded:
+        def f(x_loc, rw, wi, wg, wo):
+            # x_loc: (B_loc, S_loc, d) — seq-sharded (SP); gather seq over TP
+            xg = jax.lax.all_gather(x_loc, tp, axis=1, tiled=True)
+            bl, s, _ = xg.shape
+            y = _moe_inner(xg.reshape(-1, d), rw, wi, wg, wo, cfg)
+            y = y.reshape(bl, s, d)
+            # partial over the f-shards -> reduce + re-scatter seq
+            return jax.lax.psum_scatter(y, tp, scatter_dimension=1, tiled=True)
+
+        x_spec, y_spec = P(dp, tp, None), P(dp, tp, None)
+    elif dist.joint_tp:
+        # weights-stay-put decode: experts' f-dim sharded over ALL axes;
+        # every device computes every token against its 1/(dp*tp) slice,
+        # partials psum'd over the whole mesh — zero weight movement.
+        axes = tuple(dist.dp_axes) + (tp,)
+
+        def f(x_loc, rw, wi, wg, wo):
+            bl, s, _ = x_loc.shape
+            y = _moe_inner(x_loc.reshape(-1, d), rw, wi, wg, wo, cfg)
+            return jax.lax.psum(y.reshape(bl, s, d), axes)
+
+        return shard_map(
+            f, mesh=dist.mesh,
+            in_specs=(P(None, None, None), P(None, None),
+                      P(None, None, axes), P(None, None, axes),
+                      P(None, axes, None)),
+            out_specs=P(None, None, None), check_vma=False,
+        )(x, p["router"], p["w_in"], p["w_gate"], p["w_out"])
+    else:
+        def f(x_loc, rw, wi, wg, wo):
+            # decode path: sequence too short to shard; every TP shard
+            # computes the local tokens against its f-slice, then psum
+            bl, s, _ = x_loc.shape
+            y = _moe_inner(x_loc.reshape(-1, d), rw, wi, wg, wo, cfg)
+            return jax.lax.psum(y.reshape(bl, s, d), tp)
+
+        x_spec, y_spec = P(dp, None, None), P(dp, None, None)
+
+    return shard_map(
+        f, mesh=dist.mesh,
+        in_specs=(x_spec, P(None, None),
+                  P(None, None, tp), P(None, None, tp), P(None, tp, None)),
+        out_specs=y_spec, check_vma=False,
+    )(x, p["router"], p["w_in"], p["w_gate"], p["w_out"])
+
+
+def moe_block_ep(x, p, cfg, dist: Distribution, site: str = "moe",
+                 capacity_factor: float = 2.0):
+    """Expert-parallel variant (§Perf): experts sharded over the TP axis
+    (each shard owns n_experts/TP FULL experts); tokens move over two
+    all_to_all hops. Tokens beyond the per-destination capacity
+    (cf * T_loc*k / tp) are dropped — standard EP semantics.
+
+    Collective bytes per layer ~ 3 * all_to_all(T_loc*k*d) vs TP-MoE's
+    all_gather(T*d) + reduce_scatter(T*d)."""
+    B, S, d = x.shape
+    if dist.mesh is None:
+        return moe_block(x, p, cfg, dist, site)
+    dp, tp = dist.dp, dist.tp_axis
+    tp_size = dist.mesh.shape[tp]
+    E, k = cfg.n_experts, cfg.top_k
+    assert E % tp_size == 0, "EP requires n_experts % tp == 0"
+    e_loc = E // tp_size
+
+    def f(x_loc, rw, wi, wg, wo):
+        bl, sl, _ = x_loc.shape
+        xf = x_loc.reshape(-1, d)
+        T = xf.shape[0]
+        weights, ids = _route(xf, rw, cfg)
+        flat_ids = ids.reshape(-1)                        # (T*k,)
+        order = jnp.argsort(flat_ids, stable=True)        # expert(=>shard)-sorted
+        token_of = order // k
+        ids_sorted = jnp.take(flat_ids, order)
+        sizes_shard = jnp.bincount(flat_ids // e_loc,
+                                   length=tp_size).astype(jnp.int32)
+        offs = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                                jnp.cumsum(sizes_shard)[:-1]])
+        cap = int(capacity_factor * (T * k) / tp_size) + 1
+        slot = jnp.arange(tp_size * cap)
+        shard_of = slot // cap
+        j = slot % cap
+        src = offs[shard_of] + j                          # sorted-index per slot
+        valid = j < sizes_shard[shard_of]
+        srcc = jnp.minimum(src, T * k - 1)
+        send_x = jnp.where(valid[:, None],
+                           jnp.take(xf, jnp.take(token_of, srcc), axis=0), 0.0)
+        send_id = jnp.where(valid, jnp.take(ids_sorted, srcc), -1)
+        recv_x = jax.lax.all_to_all(send_x.reshape(tp_size, cap, d), tp,
+                                    split_axis=0, concat_axis=0)
+        recv_id = jax.lax.all_to_all(send_id.reshape(tp_size, cap), tp,
+                                     split_axis=0, concat_axis=0)
+        my = jax.lax.axis_index(tp)
+        loc_id = jnp.where(recv_id >= 0, recv_id - my * e_loc,
+                           e_loc).reshape(-1)
+        lorder = jnp.argsort(loc_id, stable=True)
+        lsorted = jnp.take(recv_x.reshape(-1, d), lorder, axis=0)
+        lsizes = jnp.bincount(loc_id, length=e_loc + 1).astype(jnp.int32)[:e_loc]
+        out_sorted = _moe_ffn(lsorted, lsizes, cfg, wi, wg, wo)
+        row = jnp.arange(out_sorted.shape[0])
+        out_sorted = jnp.where((row < jnp.sum(lsizes))[:, None], out_sorted, 0.0)
+        back = jnp.zeros_like(out_sorted).at[lorder].set(out_sorted)
+        ret = jax.lax.all_to_all(back.reshape(tp_size, cap, d), tp,
+                                 split_axis=0, concat_axis=0).reshape(-1, d)
+        w_sorted = jnp.take(weights.reshape(-1), order)
+        dest_tok = jnp.where(valid, jnp.take(token_of, srcc), T)  # T = drop row
+        contrib = ret.astype(jnp.float32) \
+            * jnp.where(valid, jnp.take(w_sorted, srcc), 0.0)[:, None]
+        out_tok = jnp.zeros((T + 1, d), jnp.float32).at[dest_tok].add(contrib)[:T]
+        return out_tok.astype(x_loc.dtype).reshape(bl, sl, d)
+
+    return shard_map(
+        f, mesh=dist.mesh,
+        in_specs=(P(dp, tp, None), P(None, None),
+                  P(tp, None, None), P(tp, None, None), P(tp, None, None)),
+        out_specs=P(dp, tp, None), check_vma=False,
+    )(x, p["router"], p["w_in"], p["w_gate"], p["w_out"])

@@ -1,0 +1,189 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked algorithm.
+
+Follows the minimal SSD reference of arXiv:2405.21060 §6: the sequence is
+split into chunks; within a chunk the dual quadratic (attention-like) form is
+used, across chunks a linear recurrence carries the (heads, head_dim, state)
+SSM state. Heads are kept factored as (groups g, heads-per-group e) so B/C
+(shared per group, GVA-style) never materialize per-head.
+
+Sharding: d_inner (= g*e*head_dim) channels shard over the TP axis on the
+``e`` dimension; all SSD einsums are batched over (g, e) so the layer is
+embarrassingly TP-parallel with no collectives (the projections in/out carry
+the usual Megatron pattern).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Distribution, dense, rms_norm
+
+Array = jax.Array
+
+
+def init_ssm(key, cfg, dtype=jnp.float32):
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    w = cfg.ssm_conv
+    ks = jax.random.split(key, 10)
+    s = d ** -0.5
+    return {
+        "in_x": jax.random.normal(ks[0], (d, di), dtype) * s,
+        "in_z": jax.random.normal(ks[1], (d, di), dtype) * s,
+        "in_B": jax.random.normal(ks[2], (d, g * n), dtype) * s,
+        "in_C": jax.random.normal(ks[3], (d, g * n), dtype) * s,
+        "in_dt": jax.random.normal(ks[4], (d, h), dtype) * s,
+        "conv_x": jax.random.normal(ks[5], (w, di), dtype) * w ** -0.5,
+        "conv_B": jax.random.normal(ks[6], (w, g * n), dtype) * w ** -0.5,
+        "conv_C": jax.random.normal(ks[7], (w, g * n), dtype) * w ** -0.5,
+        "A_log": jnp.zeros((h,), dtype),          # A = -exp(A_log) = -1
+        "D": jnp.ones((h,), dtype),
+        "dt_bias": jnp.zeros((h,), dtype),
+        "norm": jnp.ones((di,), dtype),
+        "out": jax.random.normal(ks[8], (di, d), dtype) * di ** -0.5,
+    }
+
+
+def _causal_conv(x: Array, kern: Array, state: Array | None = None):
+    """Depthwise causal conv. x: (B, S, C), kern: (w, C).
+    state: (B, w-1, C) trailing inputs from the previous segment (decode).
+    Returns (y, new_state)."""
+    w = kern.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], w - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * kern[i] for i in range(w))
+    new_state = xp[:, -(w - 1):, :] if w > 1 else state
+    return jax.nn.silu(y), new_state
+
+
+def _segsum(a: Array) -> Array:
+    """a: (..., Q) -> lower-triangular pairwise sums L[q,k] = sum_{k<i<=q} a_i,
+    -inf above the diagonal (exp -> 0)."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    dlt = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, dlt, -jnp.inf)
+
+
+def ssd_chunked(x: Array, dt: Array, A: Array, B: Array, C: Array,
+                chunk: int, init_state: Array | None = None):
+    """SSD scan. x: (b, l, h, p); dt: (b, l, h); A: (h,) (negative);
+    B, C: (b, l, g, n). Returns (y (b,l,h,p), final_state (b,g,e,p,n))."""
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    e = h // g
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    lc = x.shape[1]
+    c = lc // chunk
+    xc = x.reshape(b, c, chunk, g, e, p)
+    dtc = dt.reshape(b, c, chunk, g, e)
+    Bc = B.reshape(b, c, chunk, g, n)
+    Cc = C.reshape(b, c, chunk, g, n)
+    Ac = (dtc * (-jnp.exp(A.astype(jnp.float32))).reshape(g, e))  # (b,c,Q,g,e)
+    x_dt = xc * dtc[..., None]
+
+    A_cum = jnp.cumsum(Ac, axis=2)                       # (b,c,Q,g,e)
+    # intra-chunk (dual quadratic form)
+    Lt = jnp.exp(_segsum(jnp.moveaxis(Ac, 2, -1)))       # (b,c,g,e,Q,Q)
+    scores = jnp.einsum("bcqgn,bckgn->bcgqk", Cc, Bc)
+    y_diag = jnp.einsum("bcgqk,bcgeqk,bckgep->bcqgep", scores, Lt,
+                        x_dt.astype(jnp.float32))
+    # chunk -> state contributions
+    decay_states = jnp.exp(A_cum[:, :, -1:, ...] - A_cum)  # (b,c,Q,g,e)
+    states = jnp.einsum("bckgn,bckge,bckgep->bcgepn", Bc, decay_states,
+                        x_dt.astype(jnp.float32))
+    chunk_decay = jnp.exp(A_cum[:, :, -1])               # (b,c,g,e)
+
+    def scanf(S, inp):
+        st, dec = inp
+        S_new = S * dec[..., None, None] + st
+        return S_new, S                                   # emit state BEFORE chunk
+
+    S0 = (init_state.astype(jnp.float32) if init_state is not None
+          else jnp.zeros((b, g, e, p, n), jnp.float32))
+    final, prev_states = jax.lax.scan(
+        scanf, S0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)        # (b,c,g,e,p,n)
+    # inter-chunk contribution
+    state_decay = jnp.exp(A_cum)                         # (b,c,Q,g,e)
+    y_off = jnp.einsum("bcqgn,bcgepn,bcqge->bcqgep", Cc, prev_states,
+                       state_decay)
+    y = (y_diag + y_off).reshape(b, lc, h, p)[:, :l]
+    return y.astype(x.dtype), final
+
+
+def ssd_step(state: Array, x_t: Array, dt_t: Array, A: Array, B_t: Array,
+             C_t: Array):
+    """Single-token SSD recurrence. state: (b,g,e,p,n); x_t: (b,h,p);
+    dt_t: (b,h); B_t, C_t: (b,g,n). Returns (y (b,h,p), new_state)."""
+    b, g, e, p, n = state.shape
+    xg = x_t.reshape(b, g, e, p).astype(jnp.float32)
+    dtg = dt_t.reshape(b, g, e)
+    Ag = (-jnp.exp(A.astype(jnp.float32))).reshape(g, e)
+    da = jnp.exp(dtg * Ag)                               # (b,g,e)
+    upd = jnp.einsum("bgn,bgep->bgepn", B_t.astype(jnp.float32), xg * dtg[..., None])
+    state = state * da[..., None, None] + upd
+    y = jnp.einsum("bgn,bgepn->bgep", C_t.astype(jnp.float32), state)
+    return y.reshape(b, g * e, p).astype(x_t.dtype), state
+
+
+def ssm_block(x: Array, p, cfg, dist: Distribution, *,
+              cache: dict | None = None, site: str = "ssm"):
+    """Full Mamba-2 block. x: (B, S, d). cache (decode):
+    {"conv_x","conv_B","conv_C": (B,w-1,·), "state": (B,g,e,p,n)}.
+    Returns (out, new_cache | None)."""
+    B_, S, d = x.shape
+    g, n, h, pdim = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    xz = dense(x, p["in_x"], site + "_x")
+    z = dense(x, p["in_z"], site + "_z")
+    Bp = dense(x, p["in_B"], site + "_B")
+    Cp = dense(x, p["in_C"], site + "_C")
+    dt = jax.nn.softplus(
+        dense(x, p["in_dt"], site + "_dt").astype(jnp.float32) + p["dt_bias"])
+
+    if cache is None and S > 1 and dist.mesh is not None:
+        # SSD is sequential over seq: run it with the sequence GATHERED and
+        # the d_inner channels sharded over tp instead (every SSD einsum is
+        # batched over (g, e), so channel sharding is collective-free); the
+        # block output is reduce-scattered back to seq shards by the
+        # transformer-level constraint. Without this pin XLA shuffles the
+        # big (b, c, h, Q, K) intra-chunk tensors across the mesh.
+        xz = dist.constrain(xz, dist.dp, None, dist.tp_axis)
+        z = dist.constrain(z, dist.dp, None, dist.tp_axis)
+        Bp = dist.constrain(Bp, dist.dp, None, None)
+        Cp = dist.constrain(Cp, dist.dp, None, None)
+        dt = dist.constrain(dt, dist.dp, None, dist.tp_axis)
+
+    cc = cache or {}
+    xz, cx = _causal_conv(xz, p["conv_x"], cc.get("conv_x"))
+    Bp, cb = _causal_conv(Bp, p["conv_B"], cc.get("conv_B"))
+    Cp, cv = _causal_conv(Cp, p["conv_C"], cc.get("conv_C"))
+
+    xh = xz.reshape(B_, S, h, pdim)
+    Bh = Bp.reshape(B_, S, g, n)
+    Ch = Cp.reshape(B_, S, g, n)
+
+    if cache is not None and S == 1:
+        y, state = ssd_step(cc["state"], xh[:, 0], dt[:, 0], p["A_log"],
+                            Bh[:, 0], Ch[:, 0])
+        y = y[:, None]
+    else:
+        y, state = ssd_chunked(xh, dt, p["A_log"], Bh, Ch,
+                               chunk=min(64, max(8, S)),
+                               init_state=cc.get("state"))
+    y = y.reshape(B_, S, h * pdim) + xz * jnp.repeat(
+        p["D"], pdim).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = dense(y, p["out"], site + "_out")
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv_x": cx, "conv_B": cb, "conv_C": cv, "state": state}
+    return out, new_cache

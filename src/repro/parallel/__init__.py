@@ -1,0 +1,1 @@
+from .collectives import reproducible_psum, quantize_tree, dequantize_tree

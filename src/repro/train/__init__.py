@@ -1,0 +1,2 @@
+from .optimizer import adamw, cosine_schedule, Optimizer
+from .loop import make_train_step, make_loss_fn, Trainer

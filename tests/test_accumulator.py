@@ -1,0 +1,190 @@
+"""Bit-exactness and algebraic properties of the FDP accumulator core."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import AccumulatorSpec, fdp_dot, fdp_gemm, FP32, BF16
+from repro.core import accumulator as acc
+from repro.core import fdp as fdp_mod
+
+from conftest import fdp_oracle, frac_to_f32_rne
+
+SPECS = [
+    AccumulatorSpec.paper_91bit(),
+    AccumulatorSpec(ovf=9, msb=6, lsb=-20),     # the paper's ResNet50 pick
+    AccumulatorSpec(ovf=4, msb=14, lsb=-3),     # aggressive truncation
+    AccumulatorSpec(ovf=12, msb=40, lsb=-60),   # wide
+]
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.describe())
+@pytest.mark.parametrize("scale", [1e-3, 1.0, 1e3])
+def test_dot_matches_fraction_oracle(spec, scale, rng):
+    K = int(rng.integers(3, 200))
+    a = (rng.standard_normal(K) * scale).astype(np.float32)
+    b = (rng.standard_normal(K) * scale).astype(np.float32)
+    got = np.float32(float(fdp_dot(jnp.asarray(a), jnp.asarray(b), spec)))
+    ref = fdp_oracle(a, b, spec)
+    assert got == ref
+
+
+def test_91bit_exactness_region(rng):
+    """Inside its dynamic range the 91-bit FDP returns the correctly-rounded
+    exact dot product (52+ correct bits, the paper's Fig. 2 claim)."""
+    spec = AccumulatorSpec.paper_91bit()
+    for K in (10, 100, 1000, 10000):
+        a = rng.standard_normal(K).astype(np.float32)
+        b = rng.standard_normal(K).astype(np.float32)
+        got = float(fdp_dot(jnp.asarray(a), jnp.asarray(b), spec))
+        ref = float(np.dot(a.astype(np.float64), b.astype(np.float64)))
+        # f64 dot of f32 data is itself ~exact here; agreement to f32 ulp
+        assert got == pytest.approx(ref, rel=2e-7)
+
+
+def test_permutation_invariance(rng):
+    """Fixed-point accumulation is associative & commutative => bitwise
+    reproducible under any summation order (the paper's core claim)."""
+    spec = AccumulatorSpec.paper_91bit()
+    K = 4096
+    a = (rng.standard_normal(K) * 1e4).astype(np.float32)
+    b = (rng.standard_normal(K) * 1e-2).astype(np.float32)
+    v0 = float(fdp_dot(jnp.asarray(a), jnp.asarray(b), spec))
+    for s in range(5):
+        perm = np.random.default_rng(s).permutation(K)
+        v = float(fdp_dot(jnp.asarray(a[perm]), jnp.asarray(b[perm]), spec))
+        assert v == v0
+
+
+def test_fp32_sequential_is_not_reproducible(rng):
+    """Sanity check of the baseline: conventional rounded accumulation is
+    order-dependent on ill-conditioned data (what Fig. 2 shows degrading)."""
+    from repro.data.conditioned import gen_dot
+    a, b, _ = gen_dot(4096, cond=1e12, seed=3)
+    v0 = float(fdp_mod.fma_dot(jnp.asarray(a), jnp.asarray(b)))
+    vals = {v0}
+    for s in range(6):
+        perm = np.random.default_rng(s).permutation(a.shape[0])
+        vals.add(float(fdp_mod.fma_dot(jnp.asarray(a[perm]), jnp.asarray(b[perm]))))
+    assert len(vals) > 1
+
+
+def test_wrap_vs_saturate():
+    spec_w = AccumulatorSpec(ovf=2, msb=4, lsb=-4, overflow_mode="wrap")
+    spec_s = AccumulatorSpec(ovf=2, msb=4, lsb=-4, overflow_mode="saturate")
+    a = jnp.full((64,), 16.0, jnp.float32)
+    b = jnp.ones((64,), jnp.float32)
+    # true sum 1024 >> 2^(4+2): wrap differs from saturate
+    vw = float(fdp_dot(a, b, spec_w))
+    vs = float(fdp_dot(a, b, spec_s))
+    W = spec_w.width
+    exact_ulp = int(1024 * 2 ** 4)  # in ulp of 2^-4
+    wrapped = ((exact_ulp + 2 ** (W - 1)) % 2 ** W) - 2 ** (W - 1)
+    assert vw == wrapped * 2.0 ** spec_w.lsb
+    assert vs == (2 ** (W - 1) - 1) * 2.0 ** spec_s.lsb
+
+
+def test_chunked_reduction_matches_unchunked(rng):
+    """Long-K path (lax.scan chunking) is exact too."""
+    spec = AccumulatorSpec.paper_91bit()
+    K = acc.SAFE_CHUNK * 3 + 77
+    a = rng.standard_normal(K).astype(np.float32)
+    b = rng.standard_normal(K).astype(np.float32)
+    got = float(fdp_dot(jnp.asarray(a), jnp.asarray(b), spec))
+    ref = float(np.dot(a.astype(np.float64), b.astype(np.float64)))
+    assert got == pytest.approx(ref, rel=2e-7)
+
+
+def test_bf16_inputs(rng):
+    spec = AccumulatorSpec.paper_91bit()
+    K = 64
+    a = rng.standard_normal(K).astype(np.float32)
+    b = rng.standard_normal(K).astype(np.float32)
+    a16 = jnp.asarray(a).astype(jnp.bfloat16)
+    b16 = jnp.asarray(b).astype(jnp.bfloat16)
+    got = float(fdp_dot(a16, b16, spec, BF16))
+    ref = float(np.dot(np.asarray(a16, np.float64), np.asarray(b16, np.float64)))
+    assert got == pytest.approx(ref, rel=2e-7)
+
+
+def test_lsb_refinement_monotone(rng):
+    """Refining lsb can only reduce (or keep) the truncation error."""
+    K = 128
+    a = (rng.standard_normal(K) * 0.01).astype(np.float32)
+    b = (rng.standard_normal(K) * 0.01).astype(np.float32)
+    exact = float(np.dot(a.astype(np.float64), b.astype(np.float64)))
+    errs = []
+    for lsb in (-8, -16, -24, -32, -48):
+        spec = AccumulatorSpec(ovf=10, msb=10, lsb=lsb)
+        v = float(fdp_dot(jnp.asarray(a), jnp.asarray(b), spec))
+        errs.append(abs(v - exact))
+    for e0, e1 in zip(errs, errs[1:]):
+        assert e1 <= e0 + 1e-12
+
+
+def test_rne_mode_at_least_as_accurate(rng):
+    """Per-product RNE error is U(-u/2,u/2) vs trunc U(-u,u) (signed
+    products): the random-walk RMS of the dot error should be ~2x smaller.
+    Statistical test over 40 trials with a generous margin."""
+    K = 256
+    tr = AccumulatorSpec(ovf=10, msb=10, lsb=-12, round_mode="trunc")
+    rn = AccumulatorSpec(ovf=10, msb=10, lsb=-12, round_mode="rne")
+    et, en = [], []
+    r = np.random.default_rng(7)
+    for _ in range(40):
+        a = r.standard_normal(K).astype(np.float32)
+        b = r.standard_normal(K).astype(np.float32)
+        exact = float(np.dot(a.astype(np.float64), b.astype(np.float64)))
+        et.append(float(fdp_dot(jnp.asarray(a), jnp.asarray(b), tr)) - exact)
+        en.append(float(fdp_dot(jnp.asarray(a), jnp.asarray(b), rn)) - exact)
+    rms_t = np.sqrt(np.mean(np.square(et)))
+    rms_n = np.sqrt(np.mean(np.square(en)))
+    assert rms_n < rms_t * 0.9
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 40), st.integers(0, 2 ** 31 - 1))
+def test_hypothesis_dot_vs_oracle(k, seed):
+    spec = AccumulatorSpec(ovf=8, msb=12, lsb=-24)
+    r = np.random.default_rng(seed)
+    a = (r.standard_normal(k) * r.choice([1e-2, 1.0, 30.0])).astype(np.float32)
+    b = (r.standard_normal(k) * r.choice([1e-2, 1.0, 30.0])).astype(np.float32)
+    got = np.float32(float(fdp_dot(jnp.asarray(a), jnp.asarray(b), spec)))
+    assert got == fdp_oracle(a, b, spec)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(-1e6, 1e6, width=32), min_size=2, max_size=24),
+       st.integers(0, 10 ** 6))
+def test_hypothesis_permutation_invariance(vals, seed):
+    spec = AccumulatorSpec.paper_91bit()
+    a = np.asarray(vals, np.float32)
+    b = np.roll(a, 1)
+    v0 = float(fdp_dot(jnp.asarray(a), jnp.asarray(b), spec))
+    perm = np.random.default_rng(seed).permutation(len(vals))
+    v1 = float(fdp_dot(jnp.asarray(a[perm]), jnp.asarray(b[perm]), spec))
+    assert v0 == v1
+
+
+def test_for_exact_sizing(rng):
+    """for_exact() must make accumulation exact & overflow-free for f32."""
+    spec = AccumulatorSpec.for_exact(FP32, max_terms=1024)
+    K = 512
+    a = (rng.standard_normal(K) * 1e30).astype(np.float32)
+    b = (rng.standard_normal(K) * 1e-30).astype(np.float32)
+    got = float(fdp_dot(jnp.asarray(a), jnp.asarray(b), spec))
+    ref = float(np.dot(a.astype(np.float64), b.astype(np.float64)))
+    assert got == pytest.approx(ref, rel=2e-7)
+
+
+def test_gemm_matches_dot(rng):
+    spec = AccumulatorSpec(ovf=9, msb=6, lsb=-20)
+    M, K, N = 5, 67, 3
+    A = rng.standard_normal((M, K)).astype(np.float32)
+    B = rng.standard_normal((K, N)).astype(np.float32)
+    G = np.asarray(fdp_gemm(jnp.asarray(A), jnp.asarray(B), spec))
+    for i in range(M):
+        for j in range(N):
+            d = float(fdp_dot(jnp.asarray(A[i]), jnp.asarray(B[:, j]), spec))
+            assert G[i, j] == np.float32(d)

@@ -1,0 +1,104 @@
+"""BLAS dispatch layer: policy lookup, mode equivalence, site tracing."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import AccumulatorSpec, BF16, FP32
+from repro.core.dispatch import (GemmConfig, NumericsPolicy, current_policy,
+                                 gemm, grouped_av, grouped_qk, sites_seen,
+                                 use_policy, MXU_BF16, MXU_FP32)
+
+
+def test_policy_lookup_precedence():
+    base = GemmConfig(BF16, None, "native")
+    attn = GemmConfig(FP32, AccumulatorSpec(4, 8, -8), "simulate")
+    exact = GemmConfig(FP32, AccumulatorSpec.paper_91bit(), "simulate")
+    pol = NumericsPolicy(base, overrides=(("attn_qk", exact), ("attn_*", attn)))
+    assert pol.lookup("mlp_in") is base
+    assert pol.lookup("attn_av") is attn
+    assert pol.lookup("attn_qk") is exact          # exact match wins
+    pol2 = pol.with_override("mlp_*", attn)
+    assert pol2.lookup("mlp_in") is attn
+
+
+def test_context_manager_restores():
+    before = current_policy()
+    with use_policy(MXU_FP32) as p:
+        assert current_policy() is p
+    assert current_policy() is before
+
+
+def test_native_vs_simulate_agreement(rng):
+    """91-bit simulate mode == f64 reference; native f32 close."""
+    a = jnp.asarray(rng.standard_normal((8, 64)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((64, 4)), jnp.float32)
+    ref = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+    sim = NumericsPolicy(GemmConfig(FP32, AccumulatorSpec.paper_91bit(),
+                                    "simulate"))
+    with use_policy(sim):
+        out_sim = gemm(a, b, site="t")
+    np.testing.assert_allclose(np.asarray(out_sim), ref, rtol=2e-7)
+    with use_policy(MXU_FP32):
+        out_nat = gemm(a, b, site="t")
+    np.testing.assert_allclose(np.asarray(out_nat), ref, rtol=1e-5)
+
+
+def test_batched_simulate(rng):
+    a = jnp.asarray(rng.standard_normal((3, 2, 8, 16)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((3, 2, 16, 4)), jnp.float32)
+    pol = NumericsPolicy(GemmConfig(FP32, AccumulatorSpec.paper_91bit(),
+                                    "simulate"))
+    with use_policy(pol):
+        out = gemm(a, b, site="t")
+    ref = np.einsum("bcij,bcjk->bcik", np.asarray(a, np.float64),
+                    np.asarray(b, np.float64))
+    assert out.shape == (3, 2, 8, 4)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-6)
+
+
+def test_grouped_einsums_match_modes(rng):
+    """grouped_qk/grouped_av native einsum == simulate vmapped-2D path."""
+    q = jnp.asarray(rng.standard_normal((2, 2, 3, 5, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 2, 7, 8)), jnp.float32)
+    with use_policy(MXU_FP32):
+        s_native = grouped_qk(q, k, site="attn_qk")
+    sim = NumericsPolicy(GemmConfig(FP32, AccumulatorSpec.paper_91bit(),
+                                    "simulate"))
+    with use_policy(sim):
+        s_sim = grouped_qk(q, k, site="attn_qk")
+    np.testing.assert_allclose(np.asarray(s_native), np.asarray(s_sim),
+                               rtol=1e-5, atol=1e-5)
+    p = jax.nn.softmax(s_native, -1)
+    v = jnp.asarray(rng.standard_normal((2, 2, 7, 8)), jnp.float32)
+    with use_policy(MXU_FP32):
+        o_native = grouped_av(p, v, site="attn_av")
+    with use_policy(sim):
+        o_sim = grouped_av(p, v, site="attn_av")
+    np.testing.assert_allclose(np.asarray(o_native), np.asarray(o_sim),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sites_are_traced():
+    a = jnp.ones((4, 4))
+    with use_policy(MXU_BF16):
+        gemm(a, a, site="my_unique_site")
+    assert "my_unique_site" in sites_seen()
+
+
+def test_generator_reports():
+    from repro.core import generate_gemm
+    g = generate_gemm(AccumulatorSpec(9, 6, -20), FP32, "simulate")
+    r = g.report
+    assert r.num_limbs == 3 and r.spec.width == 36
+    assert r.watts_fpga_model > 0 and "fdp" in r.name
+    with pytest.raises(ValueError):
+        from repro.core import POSIT16_1
+        generate_gemm(None, POSIT16_1, "native")   # no native posit path
+
+
+def test_energy_model_reproduces_paper_anchors():
+    from repro.core.energy import PAPER_POINTS
+    for name, (model_w, paper_w) in PAPER_POINTS.items():
+        assert model_w == pytest.approx(paper_w, rel=1e-6), name

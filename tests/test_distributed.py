@@ -1,0 +1,26 @@
+"""Multi-device tests: run the distributed worker in a subprocess with 8
+placeholder devices (the main test process keeps 1 device)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+CHECKS = ["reproducible_psum", "moe_tp_parity", "moe_ep_parity",
+          "pipeline_parity", "sp_forward_parity", "compressed_grads"]
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("check", CHECKS)
+def test_distributed(check):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "distributed_worker.py"),
+         check],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert f"CHECK {check} OK" in r.stdout

@@ -1,0 +1,106 @@
+"""Format front-end: exact decode and posit round-trips."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BF16, FP16, FP32, POSIT8_0, POSIT16_1, POSIT32_2
+
+
+@pytest.mark.parametrize("val", [0.0, 1.0, -1.0, 0.5, 3.14159, -2.75e10,
+                                 1.1754944e-38, 1e-40, 65504.0])
+def test_fp32_decode_exact(val):
+    d = FP32.decode(jnp.float32(val))
+    back = float(d.mant) * 2.0 ** int(d.exp) * (-1) ** int(d.sign)
+    assert back == np.float32(val)
+
+
+def test_fp32_decode_specials():
+    d = FP32.decode(jnp.array([np.inf, -np.inf, np.nan], jnp.float32))
+    assert bool(d.is_inf[0]) and bool(d.is_inf[1]) and bool(d.is_nan[2])
+    assert int(d.mant[0]) == 0
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.floats(width=32, allow_nan=False, allow_infinity=False))
+def test_fp32_decode_roundtrip_hypothesis(v):
+    d = FP32.decode(jnp.float32(v))
+    back = np.float64(int(d.mant)) * 2.0 ** int(d.exp) * (-1.0) ** int(d.sign)
+    assert np.float32(back) == np.float32(v)
+
+
+def test_bf16_decode_exact(rng):
+    x = jnp.asarray(rng.standard_normal(64), jnp.bfloat16)
+    d = BF16.decode(x)
+    back = np.asarray(d.mant, np.float64) * 2.0 ** np.asarray(d.exp) \
+        * (-1.0) ** np.asarray(d.sign)
+    np.testing.assert_array_equal(back.astype(np.float32),
+                                  np.asarray(x, np.float32))
+
+
+@pytest.mark.parametrize("fmt", [POSIT8_0, POSIT16_1, POSIT32_2],
+                         ids=lambda f: f.name)
+def test_posit_roundtrip_through_float(fmt, rng):
+    """to_float(from_float(x)) is idempotent: re-encoding gives same pattern."""
+    x = jnp.asarray(rng.standard_normal(256) * 10 ** rng.uniform(-3, 3, 256),
+                    jnp.float32)
+    p = fmt.from_float(x)
+    f = fmt.to_float(p)
+    p2 = fmt.from_float(f)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(p2))
+
+
+@pytest.mark.parametrize("fmt,tol", [(POSIT8_0, 0.07), (POSIT16_1, 2e-3),
+                                     (POSIT32_2, 2e-6)], ids=lambda x: str(x))
+def test_posit_encode_accuracy(fmt, tol, rng):
+    # sample within the format's high-precision band (posits taper off);
+    # saturation to ±minpos outside the band is by-design and tested below.
+    x = jnp.asarray(np.sign(rng.standard_normal(512))
+                    * 10 ** rng.uniform(-0.5, 0.5, 512), jnp.float32)
+    f = fmt.to_float(fmt.from_float(x))
+    rel = np.abs((np.asarray(f) - np.asarray(x)) / np.asarray(x))
+    assert np.max(rel) < tol
+
+
+def test_posit_saturates_no_underflow():
+    # below minpos encodes to minpos (posit spec: no underflow to zero)
+    tiny = jnp.float32(1e-6)
+    p = POSIT8_0.from_float(tiny)
+    assert float(POSIT8_0.to_float(p)) == 2.0 ** -6   # posit8 es=0 minpos
+    huge = jnp.float32(1e9)
+    p = POSIT8_0.from_float(huge)
+    assert float(POSIT8_0.to_float(p)) == 2.0 ** 6    # maxpos
+
+
+def test_posit16_known_patterns():
+    # posit16 es=1: 0x4000 -> 1.0 ; 0x5000 -> 2.0 ; 0x3000 -> 0.5
+    f = POSIT16_1.to_float(jnp.array([0x4000, 0x5000, 0x3000], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(f), [1.0, 2.0, 0.5])
+    # negative: two's complement of 1.0 -> -1.0
+    f = POSIT16_1.to_float(jnp.array([(-0x4000) & 0xFFFF], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(f), [-1.0])
+
+
+def test_posit_nar_and_zero():
+    f = POSIT16_1.to_float(jnp.array([0, 1 << 15], jnp.int32))
+    assert float(f[0]) == 0.0
+    assert np.isnan(float(f[1]))
+
+
+@settings(max_examples=150, deadline=None)
+@given(st.floats(-1e4, 1e4, width=32, allow_nan=False), )
+def test_posit16_nearest_hypothesis(v):
+    """from_float encodes to a pattern whose value is the nearest posit:
+    check |encoded - v| <= |neighbor - v| for both bit-neighbors."""
+    if v == 0:
+        return
+    p = int(POSIT16_1.from_float(jnp.float32(v)))
+    f0 = float(POSIT16_1.to_float(jnp.array([p], jnp.int32))[0])
+    for q in ((p + 1) & 0xFFFF, (p - 1) & 0xFFFF):
+        if q in (0, 1 << 15):
+            continue
+        fq = float(POSIT16_1.to_float(jnp.array([q], jnp.int32))[0])
+        if np.isnan(fq):
+            continue
+        assert abs(f0 - v) <= abs(fq - v) * (1 + 1e-6)
