@@ -12,8 +12,8 @@ Normative semantics (see DESIGN.md §2.2):
   * value(limbs) = Σ_l limbs[l] · 2^(lsb + 16·l)   (limbs int32, signed)
   * products are quantized ONCE at entry: round-toward-zero at 2^lsb
     (``trunc``, hardware default — drops the wires below lsb) or RNE,
-  * additions are exact; carries are propagated lazily (≤ 2^14 products
-    between normalizations, enforced by callers via chunking),
+  * additions are exact; carries are propagated lazily (≤ SAFE_CHUNK = 2^13
+    products between normalizations, enforced by callers via chunking),
   * the register wraps (or saturates) at W = ovf + msb - lsb + 1 bits.
 """
 
@@ -112,20 +112,10 @@ def zeros(spec: AccumulatorSpec, shape: Sequence[int] = ()) -> Array:
 # ---------------------------------------------------------------------------
 # Product entry: quantize an exact product onto the grid, as limb contributions
 # ---------------------------------------------------------------------------
-def product_limbs(spec: AccumulatorSpec, a: Decoded, b: Decoded) -> Array:
-    """Exact limb contributions of the products a*b (elementwise), quantized
-    at 2^lsb per ``spec.round_mode``. Result: int32 (*batch, num_limbs); each
-    limb's magnitude is < 2^17, so up to SAFE_CHUNK results may be summed
-    before ``carry_normalize``.
-
-    The significand product is computed exactly in int32 via 12-bit digit
-    splitting (24x24 -> 48 bits as three 16-bit digits), then aligned to the
-    grid with a uniform shift. Dropping the bits below position 0 of the
-    aligned non-negative magnitude implements round-toward-zero of the signed
-    product exactly.
-    """
-    L = spec.num_limbs
-    # --- exact 48-bit significand product as three 16-bit digits ----------
+def _product_digits(a: Decoded, b: Decoded) -> tuple:
+    """Exact 48-bit significand product a.mant*b.mant as three base-2^16
+    digits (d0, d1, d2), computed in int32 via 12-bit digit splitting
+    (24x24 -> 48 bits with exact carries)."""
     a_hi, a_lo = a.mant >> 12, a.mant & 0xFFF
     b_hi, b_lo = b.mant >> 12, b.mant & 0xFFF
     p0 = a_lo * b_lo                      # weight 2^0 , < 2^24
@@ -141,7 +131,23 @@ def product_limbs(spec: AccumulatorSpec, a: Decoded, b: Decoded) -> Array:
     c1 = d1_raw >> 16
     d1 = d1_raw & 0xFFFF
     d2 = d2_raw + c1                      # < 2^17 is fine (top digit)
-    digits = jnp.stack([d0, d1, d2], axis=-1)            # (*batch, 3)
+    return d0, d1, d2
+
+
+def product_limbs(spec: AccumulatorSpec, a: Decoded, b: Decoded) -> Array:
+    """Exact limb contributions of the products a*b (elementwise), quantized
+    at 2^lsb per ``spec.round_mode``. Result: int32 (*batch, num_limbs); each
+    limb's magnitude is < 2^17, so up to SAFE_CHUNK results may be summed
+    before ``carry_normalize``.
+
+    The significand product is computed exactly in int32 via 12-bit digit
+    splitting (24x24 -> 48 bits as three 16-bit digits), then aligned to the
+    grid with a uniform shift. Dropping the bits below position 0 of the
+    aligned non-negative magnitude implements round-toward-zero of the signed
+    product exactly.
+    """
+    L = spec.num_limbs
+    digits = jnp.stack(_product_digits(a, b), axis=-1)    # (*batch, 3)
 
     e_prod = a.exp + b.exp                                # exponent of digit 0
     q = e_prod - spec.lsb                                 # grid bit offset
@@ -150,6 +156,55 @@ def product_limbs(spec: AccumulatorSpec, a: Decoded, b: Decoded) -> Array:
     limbs = _place_digits(digits, q, sign, L, spec)
     # zero / special handling: zero mantissa -> all-zero contribution already.
     return limbs
+
+
+def product_limb_block_sum(spec: AccumulatorSpec, a: Decoded, b: Decoded,
+                           axis: int = 0) -> Array:
+    """``jnp.sum(product_limbs(spec, a, b), axis=axis)`` without ever
+    materializing the (*batch, L) contribution tensor — the GEMM hot path.
+
+    The sum is computed limb-by-limb over small (*batch) slabs so the working
+    set stays cache-resident on CPU (and VMEM-bounded on TPU); int32 addition
+    is exact and commutative, so the result is bit-identical to the
+    materialized form. The caller owns the SAFE_CHUNK headroom budget for
+    the reduced axis."""
+    assert axis == 0, "the fused block sum reduces the leading axis"
+    L = spec.num_limbs
+    digits = _product_digits(a, b)                        # 3 x (*batch)
+    e_prod = a.exp + b.exp
+    q = e_prod - spec.lsb
+    sign = 1 - 2 * (a.sign ^ b.sign)
+    j0 = jnp.floor_divide(q, LIMB_BITS)                   # limb of digit 0
+    r = (q - j0 * LIMB_BITS).astype(jnp.int32)            # 0..15 sub-shift
+    inc = (_rne_increment(digits, q) * sign
+           if spec.round_mode == "rne" else None)         # lands on limb 0
+    # compact 4-piece form: digit k's low part lands at limb j0+k, its high
+    # part at j0+k+1, so piece i = lo[i] + hi[i-1] (|piece| < 2^17, the
+    # headroom contract behind SAFE_CHUNK) — 4 placements per limb instead of
+    # 6 (lo, hi) ones. Pieces are placed as MAGNITUDES and the sign applied
+    # after: dropping below-limb-0 pieces of the non-negative form implements
+    # round-toward-zero exactly (a sign-folded two's-complement form would
+    # floor instead, off by 1 ulp for negative products with dropped bits).
+    lo = [jnp.left_shift(d, r) & LIMB_MASK for d in digits]
+    hi = [jnp.right_shift(jnp.left_shift(d, r), LIMB_BITS) for d in digits]
+    pieces = [lo[0], lo[1] + hi[0], lo[2] + hi[1], hi[2]]
+    pieces = [p * sign for p in pieces]
+    # Placement masks are shared across limbs (piece i of limb l needs
+    # j0 == l-i, which only depends on l-i): 0/1 multiplies through shared
+    # int32 masks measure ~1.5x faster than per-(l,i) compare+select chains
+    # on XLA:CPU, and each piece can only land on limbs -3..L-1.
+    npieces = len(pieces)
+    mask = {d: (j0 == d).astype(jnp.int32) for d in range(1 - npieces, L)}
+    out = []
+    for l in range(L):
+        acc_l = jnp.zeros(j0.shape, jnp.int32)
+        for i, piece in enumerate(pieces):
+            if l - i in mask:
+                acc_l = acc_l + piece * mask[l - i]
+        if inc is not None and l == 0:
+            acc_l = acc_l + inc
+        out.append(jnp.sum(acc_l, axis=axis))
+    return jnp.stack(out, axis=-1)
 
 
 def _place_digits(digits: Array, q: Array, sign: Array, L: int,
@@ -176,16 +231,18 @@ def _place_digits(digits: Array, q: Array, sign: Array, L: int,
     return out
 
 
-def _rne_correction(digits: Array, q: Array, L: int) -> Array:
-    """+1 ulp correction for round-to-nearest-even at the grid lsb.
+def _rne_increment(digits, q: Array) -> Array:
+    """The +1 ulp RNE increment (int32 0/1, magnitude) for products whose
+    base-2^16 ``digits`` (sequence of arrays) sit at grid bit offset ``q``.
 
     guard = product bit at grid position -1, sticky = OR of bits below,
-    lsb_bit = product bit at position 0 (pre-round). Correction applies to
+    lsb_bit = product bit at position 0 (pre-round). The increment applies to
     limb 0 (as magnitude; caller multiplies by sign afterwards, which matches
     round-half-away-from-zero-on-ties-odd — for RNE of the magnitude this is
     correct since negation of an RNE-magnitude equals RNE of the negation).
     """
-    nd = digits.shape[-1]
+    nd = len(digits)
+
     # bit at absolute product position p (0 <= p < 16*nd): p relative to grid = q + p
     # guard: grid pos -1 -> product bit pb = -1 - q ; valid if 0 <= pb < 16*nd
     def product_bit(pb):
@@ -194,7 +251,7 @@ def _rne_correction(digits: Array, q: Array, L: int) -> Array:
         val = jnp.zeros(pb.shape, jnp.int32)
         for kk in range(nd):
             val = val + jnp.where(k == kk,
-                                  jnp.right_shift(digits[..., kk], s) & 1, 0)
+                                  jnp.right_shift(digits[kk], s) & 1, 0)
         return jnp.where((pb >= 0) & (pb < LIMB_BITS * nd), val, 0)
 
     def bits_below(pb):   # OR of product bits strictly below pb
@@ -203,7 +260,7 @@ def _rne_correction(digits: Array, q: Array, L: int) -> Array:
             lo = pb - kk * LIMB_BITS     # bits of digit kk strictly below pb
             nbits = jnp.clip(lo, 0, LIMB_BITS)
             mask = jnp.left_shift(1, nbits) - 1
-            any_below = any_below | ((digits[..., kk] & mask) != 0)
+            any_below = any_below | ((digits[kk] & mask) != 0)
         return any_below
 
     pb_guard = -1 - q
@@ -213,8 +270,15 @@ def _rne_correction(digits: Array, q: Array, L: int) -> Array:
     # entirely-below-grid products: guard position above all digits -> pb_guard >= 16nd
     # handled by product_bit bounds (guard=0 -> no correction; trunc-like).
     inc = (guard == 1) & (sticky | (lsb_bit == 1))
+    return inc.astype(jnp.int32)
+
+
+def _rne_correction(digits: Array, q: Array, L: int) -> Array:
+    """RNE increment as a (*batch, L) limb tensor (limb 0 carries it)."""
+    nd = digits.shape[-1]
+    inc = _rne_increment(tuple(digits[..., kk] for kk in range(nd)), q)
     corr = jnp.zeros((*digits.shape[:-1], L), dtype=jnp.int32)
-    corr = corr.at[..., 0].set(inc.astype(jnp.int32))
+    corr = corr.at[..., 0].set(inc)
     return corr
 
 

@@ -22,13 +22,14 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import math
 import threading
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from .accumulator import AccumulatorSpec
+from .accumulator import SAFE_CHUNK, AccumulatorSpec
 from .formats import BF16, FP32, FloatFormat, PositFormat, get_format
 
 Array = jax.Array
@@ -104,11 +105,173 @@ def sites_seen() -> frozenset:
     return frozenset(_SITES_SEEN)
 
 
+# ---------------------------------------------------------------------------
+# GemmPlan: cached block-size plans for the Pallas execution engine
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class GemmPlan:
+    """Block sizes for one (shape, fmt, spec, backend) problem instance.
+
+    ``source`` records provenance: "heuristic" (shape-derived table),
+    "measured" (autotuned on this host) or "override" (register_plan).
+    """
+
+    bm: int
+    bn: int
+    bk: int
+    source: str = "heuristic"
+
+    @property
+    def tile(self) -> tuple:
+        return (self.bm, self.bn, self.bk)
+
+
+_PLAN_CACHE: dict = {}
+_PLAN_LOCK = threading.Lock()
+_PLAN_STATS = {"hits": 0, "misses": 0, "autotuned": 0}
+
+# Candidate tiles for the measured path (clamped to the problem size).
+AUTOTUNE_CANDIDATES = (
+    (32, 32, 128), (32, 32, 512), (64, 64, 256), (64, 64, 512),
+    (128, 128, 512), (128, 128, 1024), (8, 128, 512),
+)
+
+
+def _ceil8(x: int) -> int:
+    return max(8, -(-x // 8) * 8)
+
+
+def _heuristic_plan(batch: int, m: int, n: int, k: int) -> GemmPlan:
+    """Shape-derived default tile (the measured tables on this container put
+    the knee at 64..128 square output tiles with the deepest legal K block):
+    large bk amortizes the once-per-block carry normalization, and the M/N
+    blocks stop at the problem size so padding work stays bounded."""
+    bm = min(128, _ceil8(m))
+    bn = min(128, _ceil8(n))
+    bk = min(1024, min(SAFE_CHUNK, _ceil8(k)))
+    return GemmPlan(bm, bn, bk, source="heuristic")
+
+
+def _plan_key(batch, m, n, k, fmt, spec, backend):
+    return (batch, m, n, k, fmt.name, spec, backend)
+
+
+def plan_gemm(m: int, n: int, k: int, *, fmt, spec: AccumulatorSpec,
+              batch: int = 1, backend: Optional[str] = None,
+              autotune: bool = False) -> GemmPlan:
+    """Resolve (and cache) the block-size plan for one GEMM problem.
+
+    The cache is keyed by (batch, M, N, K, fmt, spec, backend) so a compiled
+    pallas_call is reused across calls with the same signature. ``autotune``
+    measures AUTOTUNE_CANDIDATES on synthetic data and caches the winner —
+    upgrading a previously cached *heuristic* entry in place (measured and
+    override entries are never re-measured); the default is the heuristic
+    table (no compilation at plan time).
+    """
+    backend = backend or jax.default_backend()
+    key = _plan_key(batch, m, n, k, fmt, spec, backend)
+    with _PLAN_LOCK:
+        cached = _PLAN_CACHE.get(key)
+    if cached is not None and (
+            not autotune or cached.source in ("measured", "override")):
+        with _PLAN_LOCK:
+            _PLAN_STATS["hits"] += 1
+        return cached
+    if autotune:
+        plan = _measure_plan(m, n, k, fmt=fmt, spec=spec)
+        with _PLAN_LOCK:
+            _PLAN_STATS["autotuned"] += 1
+            _PLAN_STATS["misses"] += 1
+            _PLAN_CACHE[key] = plan
+        return plan
+    plan = _heuristic_plan(batch, m, n, k)
+    with _PLAN_LOCK:
+        _PLAN_STATS["misses"] += 1
+        return _PLAN_CACHE.setdefault(key, plan)
+
+
+def register_plan(m: int, n: int, k: int, plan: GemmPlan, *, fmt,
+                  spec: AccumulatorSpec, batch: int = 1,
+                  backend: Optional[str] = None) -> None:
+    """Pin a plan (e.g. from an offline sweep) for a problem signature."""
+    backend = backend or jax.default_backend()
+    key = _plan_key(batch, m, n, k, fmt, spec, backend)
+    with _PLAN_LOCK:
+        _PLAN_CACHE[key] = dataclasses.replace(plan, source="override")
+
+
+def plan_cache_info() -> dict:
+    with _PLAN_LOCK:
+        return {"size": len(_PLAN_CACHE), **_PLAN_STATS}
+
+
+def clear_plan_cache() -> None:
+    with _PLAN_LOCK:
+        _PLAN_CACHE.clear()
+        for k in _PLAN_STATS:
+            _PLAN_STATS[k] = 0
+
+
+def _measure_plan(m: int, n: int, k: int, *, fmt,
+                  spec: AccumulatorSpec) -> GemmPlan:
+    """Time AUTOTUNE_CANDIDATES on random operands and return the winner."""
+    import time
+
+    import numpy as np
+
+    from repro.kernels import ops as kops
+
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    if isinstance(fmt, PositFormat):
+        a, b = fmt.from_float(a), fmt.from_float(b)
+
+    heur = _heuristic_plan(1, m, n, k)
+    cands = {kops._fit_blocks(m, n, k, *t)
+             for t in AUTOTUNE_CANDIDATES + (heur.tile,)}
+    best, best_t = heur.tile, float("inf")
+    for bm, bn, bk in sorted(cands):
+        fn = lambda: kops.fdp_gemm(a, b, spec=spec, fmt=fmt,
+                                   bm=bm, bn=bn, bk=bk)
+        try:
+            jax.block_until_ready(fn())          # compile + warm
+        except Exception:
+            continue
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        dt = time.perf_counter() - t0
+        if dt < best_t:
+            best, best_t = (bm, bn, bk), dt
+    return GemmPlan(*best, source="measured")
+
+
+def _plan_for_operands(a: Array, b: Array, cfg: GemmConfig,
+                       autotune: bool = False) -> GemmPlan:
+    """Plan lookup from jnp.matmul-shaped operands (1-D promotion, broadcast
+    batch dims). Safe under jit tracing: only static shapes are consulted, and
+    autotune (which executes kernels) is disabled for tracers."""
+    m = a.shape[-2] if a.ndim >= 2 else 1
+    k = a.shape[-1]
+    n = b.shape[-1] if b.ndim >= 2 else 1
+    batch_dims = jnp.broadcast_shapes(
+        a.shape[:-2] if a.ndim > 2 else (), b.shape[:-2] if b.ndim > 2 else ())
+    batch = math.prod(batch_dims) if batch_dims else 1
+    if isinstance(a, jax.core.Tracer) or isinstance(b, jax.core.Tracer):
+        autotune = False
+    return plan_gemm(m, n, k, fmt=cfg.fmt, spec=cfg.acc, batch=batch,
+                     autotune=autotune)
+
+
 def gemm(a: Array, b: Array, *, site: str = "generic",
-         policy: Optional[NumericsPolicy] = None) -> Array:
+         policy: Optional[NumericsPolicy] = None,
+         plan: Optional[GemmPlan] = None) -> Array:
     """Policy-dispatched matmul. Contracts a's last dim with b's second-to-last
     (jnp.matmul semantics). Output f32 (simulate/pallas) or f32/bf16 (native,
-    preferred_element_type=f32 then cast by caller if desired)."""
+    preferred_element_type=f32 then cast by caller if desired).
+
+    ``plan`` overrides the cached/heuristic block sizes (pallas mode only).
+    """
     pol = policy or current_policy()
     cfg = pol.lookup(site)
     _SITES_SEEN.add(site)
@@ -121,34 +284,21 @@ def gemm(a: Array, b: Array, *, site: str = "generic",
     if cfg.mode == "simulate":
         from . import fdp
         f = lambda x, y: fdp.fdp_gemm(x, y, cfg.acc, cfg.fmt)
-    else:  # pallas
-        from repro.kernels import ops as kops
-        f = lambda x, y: kops.fdp_gemm(x, y, spec=cfg.acc, fmt=cfg.fmt)
+        return _batched_apply(f, a, b)
 
-    return _batched_apply(f, a, b)
+    # pallas: plan-cached block sizes, native batched grid for N-D inputs
+    from repro.kernels import ops as kops
+    plan = plan or _plan_for_operands(a, b, cfg)
+    return kops.fdp_gemm_nd(a, b, spec=cfg.acc, fmt=cfg.fmt,
+                            bm=plan.bm, bn=plan.bn, bk=plan.bk)
 
 
 def _batched_apply(f, a: Array, b: Array) -> Array:
     """Apply a 2D (M,K)x(K,N) kernel over arbitrary leading batch dims with
-    numpy broadcasting between a and b batch dims."""
-    if a.ndim == 1:
-        a = a[None, :]
-        out = _batched_apply(f, a, b)
-        return out[..., 0, :]
-    if b.ndim == 1:
-        b = b[:, None]
-        out = _batched_apply(f, a, b)
-        return out[..., :, 0]
-    if a.ndim == 2 and b.ndim == 2:
-        return f(a, b)
-    # broadcast batch dims
-    batch = jnp.broadcast_shapes(a.shape[:-2], b.shape[:-2])
-    a = jnp.broadcast_to(a, batch + a.shape[-2:])
-    b = jnp.broadcast_to(b, batch + b.shape[-2:])
-    af = a.reshape((-1,) + a.shape[-2:])
-    bf = b.reshape((-1,) + b.shape[-2:])
-    out = jax.vmap(f)(af, bf)
-    return out.reshape(batch + out.shape[-2:])
+    numpy broadcasting between a and b batch dims (vmap for the batched
+    leaf; the Pallas path has its own native batched grid in kernels.ops)."""
+    from repro.kernels.ops import matmul_batching
+    return matmul_batching(f, jax.vmap(f))(a, b)
 
 
 def grouped_qk(q: Array, k: Array, *, site: str = "attn_qk",

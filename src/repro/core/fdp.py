@@ -117,8 +117,8 @@ def fdp_gemm(a: Array, b: Array, spec: AccumulatorSpec,
         def bc(d, which):
             return jax.tree.map(
                 lambda x: x[:, :, None] if which == "a" else x[:, None, :], d)
-        contrib = acc.product_limbs(spec, bc(dac, "a"), bc(dbc, "b"))  # (kc,M,N,L)
-        s = carry + jnp.sum(contrib, axis=0)
+        s = carry + acc.product_limb_block_sum(
+            spec, bc(dac, "a"), bc(dbc, "b"), axis=0)      # limb-fused (M,N,L)
         return acc.carry_normalize(spec, s), None
 
     init = jnp.zeros((M, N, L), jnp.int32)

@@ -60,8 +60,12 @@ class GeneratedGemm:
 def generate_gemm(spec: AccumulatorSpec | None,
                   fmt: FloatFormat | PositFormat | str = FP32,
                   target: str = "simulate",
-                  tile: tuple = (128, 128, 128)) -> GeneratedGemm:
-    """Generate a GEMM kernel for a numerical spec (None = native fp32 acc)."""
+                  tile: tuple | None = None) -> GeneratedGemm:
+    """Generate a GEMM kernel for a numerical spec (None = native fp32 acc).
+
+    ``tile=None`` defers block sizes to the ``GemmPlan`` autotuner in
+    ``repro.core.dispatch`` (resolved per call shape, cached); an explicit
+    (bm, bn, bk) pins them."""
     if isinstance(fmt, str):
         fmt = get_format(fmt)
 
@@ -89,8 +93,17 @@ def generate_gemm(spec: AccumulatorSpec | None,
     if target == "pallas":
         from repro.kernels import ops as kops
 
-        fn = partial(kops.fdp_gemm, spec=spec, fmt=fmt,
-                     bm=tile[0], bn=tile[1], bk=tile[2])
+        if tile is None:
+            from . import dispatch
+
+            def fn(a, b):
+                p = dispatch.plan_gemm(a.shape[0], b.shape[1], a.shape[1],
+                                       fmt=fmt, spec=spec)
+                return kops.fdp_gemm(a, b, spec=spec, fmt=fmt,
+                                     bm=p.bm, bn=p.bn, bk=p.bk)
+        else:
+            fn = partial(kops.fdp_gemm, spec=spec, fmt=fmt,
+                         bm=tile[0], bn=tile[1], bk=tile[2])
         rep = _report("fdp_pallas", fmt, spec, "pallas", tile)
         return GeneratedGemm(fn, rep)
 
@@ -101,12 +114,14 @@ def _report(name, fmt, spec, target, tile):
     digits = -(-fmt.precision // 12)
     L = spec.num_limbs
     int_ops = digits * digits + 2 * digits * L + L
-    bm, bn, bk = tile
+    # tile=None (auto-plan): estimate VMEM with the planner's largest tile
+    bm, bn, bk = tile if tile is not None else (128, 128, 1024)
     vmem = (bm * bk + bk * bn) * 4 + bm * bn * L * 4
     return DatapathReport(
         name=name, fmt=fmt.name, spec=spec, target=target,
         num_limbs=L, digit_mults_per_mac=digits * digits,
-        int_ops_per_mac=int_ops, vmem_bytes_per_tile=vmem, tile=tile,
+        int_ops_per_mac=int_ops, vmem_bytes_per_tile=vmem,
+        tile=tile if tile is not None else "auto",
         watts_fpga_model=energy.spec_power(fmt, spec).watts,
         pj_per_mac_tpu_model=energy.tpu_fdp_pj_per_mac(fmt.precision, L),
     )

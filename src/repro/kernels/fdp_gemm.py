@@ -7,13 +7,20 @@ classic Pallas matmul: grid (M/bm, N/bn, K/bk) with K innermost; the limb
 register (bm, bn, L) persists in scratch across the K grid dimension and is
 rounded to f32 once, on the last K step — "never round between accumulations".
 
+The hot path is *limb-vectorized*: all ``bk`` product contributions of a K
+block are computed as one ``(kc, bm, bn, L)`` tensor op per K sub-chunk (no
+per-k scalar loop), summed exactly in int32, and carry-normalized ONCE per K
+block. A batched variant runs ``(B, M, K) @ (B, K, N)`` as a single
+``pallas_call`` over a 4-D grid instead of a vmap of the 2-D kernel.
+
+Int32 carry discipline: each product contributes < 2^17 per limb, so a K block
+of ``bk <= SAFE_CHUNK`` (= 2^13) products is safe between carry
+normalizations; the bound is derived in ``repro.core.accumulator`` and
+enforced here via ``MAX_BK`` (callers: ops.py).
+
 Block sizes are chosen MXU/VPU-aligned (multiples of 8×128 lanes); the kernel
 is validated bit-exactly against the pure-jnp oracle (ref.py) in interpret
 mode, which executes this same body on CPU.
-
-Int32 carry discipline: each product contributes < 2^17 per limb, so a K-block
-of bk ≤ 2^13 products is safe between carry normalizations; we normalize once
-per K-block (enforced in ops.py: bk <= 4096).
 """
 
 from __future__ import annotations
@@ -25,14 +32,78 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import accumulator as acc
-from repro.core.accumulator import AccumulatorSpec
-from repro.core.formats import FloatFormat, PositFormat
+from repro.core.accumulator import SAFE_CHUNK, AccumulatorSpec
+
+# Single source of truth for the carry-headroom contract: a K block may
+# accumulate at most SAFE_CHUNK products between carry normalizations.
+MAX_BK = SAFE_CHUNK
+
+# Slab memory budget for the vectorized inner op, per K sub-chunk. The fused
+# limb reduction (product_limb_block_sum) keeps ~a dozen (kc, bm, bn) int32
+# temporaries live, never a (kc, bm, bn, L) tensor, so the budget is per
+# single slab. Interpret mode runs through XLA:CPU where the sweet spot is
+# L2/L3-cache-sized slabs; on a real TPU the temporaries must share ~16 MB of
+# VMEM with the operand blocks.
+_SLAB_BYTES_INTERPRET = 16 << 20
+_SLAB_BYTES_TPU = 128 << 10
+_MAX_K_SUBCHUNKS = 16            # unroll cap for the static sub-chunk loop
+
+
+def _k_subchunk(bm: int, bn: int, bk: int, num_limbs: int,
+                interpret: bool) -> int:
+    """Pick the K sub-chunk size kc: as large as the slab budget allows so
+    each (kc, bm, bn) slab stays one vector op, but capped so the static
+    sub-chunk loop unrolls at most _MAX_K_SUBCHUNKS times."""
+    del num_limbs  # the fused reduction's slabs are L-independent
+    budget = _SLAB_BYTES_INTERPRET if interpret else _SLAB_BYTES_TPU
+    per_k = bm * bn * 4
+    kc = max(1, budget // per_k)
+    kc = max(kc, -(-bk // _MAX_K_SUBCHUNKS))
+    return min(kc, bk)
 
 
 def fdp_gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, spec: AccumulatorSpec,
-                    fmt, bk: int, k_grid: int):
-    """Kernel body. a: (bm, bk), b: (bk, bn), o: (bm, bn) f32,
-    acc scratch: (bm, bn, L) int32."""
+                    fmt, bk: int, k_grid: int, kc: int, batched: bool):
+    """Vectorized kernel body (2-D and batched grids).
+
+    2-D:     a (bm, bk), b (bk, bn), o (bm, bn) f32, grid (Mg, Ng, Kg).
+    batched: a (1, bm, bk), b (1, bk, bn), o (1, bm, bn), grid (B, Mg, Ng, Kg).
+    acc scratch: (bm, bn, L) int32, persists across the (innermost) K axis.
+    """
+    kidx = pl.program_id(3 if batched else 2)
+
+    @pl.when(kidx == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    if batched:
+        a, b = a[0], b[0]
+    da = fmt.decode(a)                                 # fields (bm, bk)
+    db = fmt.decode(b)                                 # fields (bk, bn)
+    da = jax.tree.map(lambda x: x.T, da)               # fields (bk, bm)
+
+    # All bk contributions of this K block, reduced limb-by-limb over
+    # (kc, bm, bn) slabs (never materializing a (kc, bm, bn, L) tensor);
+    # one carry normalization per K block (bk <= SAFE_CHUNK).
+    total = acc_ref[...]
+    for k0 in range(0, bk, kc):
+        dak = jax.tree.map(lambda x: x[k0:k0 + kc, :, None], da)   # (kc, bm, 1)
+        dbk = jax.tree.map(lambda x: x[k0:k0 + kc, None, :], db)   # (kc, 1, bn)
+        total = total + acc.product_limb_block_sum(spec, dak, dbk, axis=0)
+    acc_ref[...] = acc.carry_normalize(spec, total)
+
+    @pl.when(kidx == k_grid - 1)
+    def _emit():
+        out = acc.to_float(spec, acc_ref[...])
+        o_ref[...] = out[None] if batched else out
+
+
+def fdp_gemm_kernel_looped(a_ref, b_ref, o_ref, acc_ref, *,
+                           spec: AccumulatorSpec, fmt, bk: int, k_grid: int):
+    """The seed per-k scalar loop body, kept as the benchmark baseline
+    (benchmarks/bench_gemm.py measures the vectorized kernel against it)."""
     kidx = pl.program_id(2)
 
     @pl.when(kidx == 0)
@@ -61,27 +132,41 @@ def fdp_gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, spec: AccumulatorSpec,
         o_ref[...] = acc.to_float(spec, acc_ref[...])
 
 
+def _scratch(bm: int, bn: int, L: int):
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        return [pltpu.VMEM((bm, bn, L), jnp.int32)]
+    except Exception:  # pragma: no cover
+        return [pl.MemorySpace.ANY((bm, bn, L), jnp.int32)]
+
+
 def fdp_gemm_pallas(a: jax.Array, b: jax.Array, *, spec: AccumulatorSpec,
                     fmt, bm: int = 128, bn: int = 128, bk: int = 512,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool = True, impl: str = "vector") -> jax.Array:
     """Raw pallas_call wrapper; shapes must be multiples of the block sizes
-    (ops.py pads). Inputs: f32/bf16 arrays, or int32 posit patterns."""
+    (ops.py pads). Inputs: f32/bf16 arrays, or int32 posit patterns.
+    ``impl``: "vector" (default hot path) or "loop" (seed baseline)."""
     M, K = a.shape
     K2, N = b.shape
     assert K == K2
     assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
-    assert bk <= 4096, "bk must respect int32 carry headroom (<= 2^12)"
+    assert bk <= MAX_BK, (
+        f"bk={bk} exceeds SAFE_CHUNK={SAFE_CHUNK} (= 2^13): int32 limbs take "
+        f"< 2^17 per product, so at most SAFE_CHUNK products may accumulate "
+        f"between carry normalizations")
     L = spec.num_limbs
     grid = (M // bm, N // bn, K // bk)
 
-    kernel = functools.partial(
-        fdp_gemm_kernel, spec=spec, fmt=fmt, bk=bk, k_grid=grid[2])
-
-    try:
-        from jax.experimental.pallas import tpu as pltpu
-        scratch = [pltpu.VMEM((bm, bn, L), jnp.int32)]
-    except Exception:  # pragma: no cover
-        scratch = [pl.MemorySpace.ANY((bm, bn, L), jnp.int32)]
+    if impl == "vector":
+        kc = _k_subchunk(bm, bn, bk, L, interpret)
+        kernel = functools.partial(
+            fdp_gemm_kernel, spec=spec, fmt=fmt, bk=bk, k_grid=grid[2],
+            kc=kc, batched=False)
+    elif impl == "loop":
+        kernel = functools.partial(
+            fdp_gemm_kernel_looped, spec=spec, fmt=fmt, bk=bk, k_grid=grid[2])
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
 
     return pl.pallas_call(
         kernel,
@@ -92,6 +177,42 @@ def fdp_gemm_pallas(a: jax.Array, b: jax.Array, *, spec: AccumulatorSpec,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
-        scratch_shapes=scratch,
+        scratch_shapes=_scratch(bm, bn, L),
+        interpret=interpret,
+    )(a, b)
+
+
+def fdp_gemm_pallas_batched(a: jax.Array, b: jax.Array, *,
+                            spec: AccumulatorSpec, fmt, bm: int = 128,
+                            bn: int = 128, bk: int = 512,
+                            interpret: bool = True) -> jax.Array:
+    """Native batched grid: (B, M, K) @ (B, K, N) -> (B, M, N) as ONE
+    pallas_call over grid (B, M/bm, N/bn, K/bk) — no vmap-of-kernel. The limb
+    scratch persists across the innermost K axis only, so each (batch, i, j)
+    tile accumulates independently."""
+    B, M, K = a.shape
+    B2, K2, N = b.shape
+    assert B == B2 and K == K2, (a.shape, b.shape)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    assert bk <= MAX_BK, (
+        f"bk={bk} exceeds SAFE_CHUNK={SAFE_CHUNK} carry headroom")
+    L = spec.num_limbs
+    grid = (B, M // bm, N // bn, K // bk)
+    kc = _k_subchunk(bm, bn, bk, L, interpret)
+
+    kernel = functools.partial(
+        fdp_gemm_kernel, spec=spec, fmt=fmt, bk=bk, k_grid=grid[3],
+        kc=kc, batched=True)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda g, i, j, k: (g, i, k)),
+            pl.BlockSpec((1, bk, bn), lambda g, i, j, k: (g, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda g, i, j, k: (g, i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, M, N), jnp.float32),
+        scratch_shapes=_scratch(bm, bn, L),
         interpret=interpret,
     )(a, b)

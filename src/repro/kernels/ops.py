@@ -1,8 +1,11 @@
-"""Jitted public wrapper around the Pallas FDP GEMM kernel.
+"""Jitted public wrappers around the Pallas FDP GEMM kernels.
 
 Handles non-block-multiple shapes by zero padding (exact: zero products
-contribute nothing to the fixed-point register in either rounding mode) and
-picks interpret mode automatically off-TPU.
+contribute nothing to the fixed-point register in either rounding mode),
+batch-dim broadcasting for N-D inputs, and picks interpret mode automatically
+off-TPU. Block sizes come from the caller — normally a ``GemmPlan`` resolved
+by ``repro.core.dispatch`` — and are validated against the ``SAFE_CHUNK``
+carry-headroom bound shared with the kernel.
 """
 
 from __future__ import annotations
@@ -15,21 +18,33 @@ import jax.numpy as jnp
 from repro.core.accumulator import AccumulatorSpec
 from repro.core.formats import FP32
 
-from .fdp_gemm import fdp_gemm_pallas
+from .fdp_gemm import MAX_BK, fdp_gemm_pallas, fdp_gemm_pallas_batched
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@partial(jax.jit, static_argnames=("spec", "fmt", "bm", "bn", "bk", "interpret"))
+def _ceil(x: int, base: int = 8) -> int:
+    return -(-x // base) * base
+
+
+def _fit_blocks(M: int, N: int, K: int, bm: int, bn: int, bk: int):
+    """Clamp requested blocks to the (8-aligned) problem size and the
+    SAFE_CHUNK carry-headroom bound."""
+    return (min(bm, _ceil(M)), min(bn, _ceil(N)),
+            min(min(bk, MAX_BK), _ceil(K)))
+
+
+@partial(jax.jit,
+         static_argnames=("spec", "fmt", "bm", "bn", "bk", "interpret", "impl"))
 def fdp_gemm(a: jax.Array, b: jax.Array, *, spec: AccumulatorSpec, fmt=FP32,
              bm: int = 32, bn: int = 32, bk: int = 128,
-             interpret: bool | None = None) -> jax.Array:
+             interpret: bool | None = None, impl: str = "vector") -> jax.Array:
     """GEMM with tailored FDP accumulation: (M,K)@(K,N) -> (M,N) f32."""
     M, K = a.shape
     _, N = b.shape
-    bm_, bn_, bk_ = min(bm, _ceil(M)), min(bn, _ceil(N)), min(bk, _ceil(K))
+    bm_, bn_, bk_ = _fit_blocks(M, N, K, bm, bn, bk)
     pm, pn, pk = (-M) % bm_, (-N) % bn_, (-K) % bk_
     if pm or pk:
         a = jnp.pad(a, ((0, pm), (0, pk)))
@@ -37,9 +52,69 @@ def fdp_gemm(a: jax.Array, b: jax.Array, *, spec: AccumulatorSpec, fmt=FP32,
         b = jnp.pad(b, ((0, pk), (0, pn)))
     interp = (not _on_tpu()) if interpret is None else interpret
     out = fdp_gemm_pallas(a, b, spec=spec, fmt=fmt, bm=bm_, bn=bn_, bk=bk_,
-                          interpret=interp)
+                          interpret=interp, impl=impl)
     return out[:M, :N]
 
 
-def _ceil(x: int, base: int = 8) -> int:
-    return -(-x // base) * base
+@partial(jax.jit,
+         static_argnames=("spec", "fmt", "bm", "bn", "bk", "interpret"))
+def fdp_gemm_batched(a: jax.Array, b: jax.Array, *, spec: AccumulatorSpec,
+                     fmt=FP32, bm: int = 32, bn: int = 32, bk: int = 128,
+                     interpret: bool | None = None) -> jax.Array:
+    """Batched GEMM through the native 4-D grid: (B,M,K)@(B,K,N) -> (B,M,N)
+    f32 as one pallas_call (the batch dim needs no padding — its block is 1)."""
+    B, M, K = a.shape
+    B2, K2, N = b.shape
+    assert B == B2 and K == K2, (a.shape, b.shape)
+    bm_, bn_, bk_ = _fit_blocks(M, N, K, bm, bn, bk)
+    pm, pn, pk = (-M) % bm_, (-N) % bn_, (-K) % bk_
+    if pm or pk:
+        a = jnp.pad(a, ((0, 0), (0, pm), (0, pk)))
+    if pk or pn:
+        b = jnp.pad(b, ((0, 0), (0, pk), (0, pn)))
+    interp = (not _on_tpu()) if interpret is None else interpret
+    out = fdp_gemm_pallas_batched(a, b, spec=spec, fmt=fmt, bm=bm_, bn=bn_,
+                                  bk=bk_, interpret=interp)
+    return out[:, :M, :N]
+
+
+def matmul_batching(f2d, f3d):
+    """Wrap a 2-D kernel and a flat-batched 3-D kernel into one
+    jnp.matmul-shaped callable: 1-D operands are promoted (and the result
+    squeezed back, down to a scalar for vector·vector), leading batch dims
+    broadcast numpy-style and flatten into the 3-D kernel's batch axis."""
+    def call(a: jax.Array, b: jax.Array) -> jax.Array:
+        squeeze_a = a.ndim == 1
+        squeeze_b = b.ndim == 1
+        if squeeze_a:
+            a = a[None, :]
+        if squeeze_b:
+            b = b[:, None]
+        if a.ndim == 2 and b.ndim == 2:
+            out = f2d(a, b)
+        else:
+            batch = jnp.broadcast_shapes(a.shape[:-2], b.shape[:-2])
+            a = jnp.broadcast_to(a, batch + a.shape[-2:])
+            b = jnp.broadcast_to(b, batch + b.shape[-2:])
+            out = f3d(a.reshape((-1,) + a.shape[-2:]),
+                      b.reshape((-1,) + b.shape[-2:]))
+            out = out.reshape(batch + out.shape[-2:])
+        if squeeze_a:
+            out = out[..., 0, :]
+        if squeeze_b:
+            out = out[..., 0] if squeeze_a else out[..., :, 0]
+        return out
+
+    return call
+
+
+def fdp_gemm_nd(a: jax.Array, b: jax.Array, *, spec: AccumulatorSpec,
+                fmt=FP32, bm: int = 32, bn: int = 32, bk: int = 128,
+                interpret: bool | None = None) -> jax.Array:
+    """jnp.matmul-shaped entry point: 1-D promotion, numpy broadcasting of
+    leading batch dims, then the 2-D kernel or the native batched grid."""
+    f2d = lambda x, y: fdp_gemm(x, y, spec=spec, fmt=fmt, bm=bm, bn=bn,
+                                bk=bk, interpret=interpret)
+    f3d = lambda x, y: fdp_gemm_batched(x, y, spec=spec, fmt=fmt, bm=bm,
+                                        bn=bn, bk=bk, interpret=interpret)
+    return matmul_batching(f2d, f3d)(a, b)

@@ -44,7 +44,8 @@ class ContinuousBatcher:
     """
 
     def __init__(self, cfg, params, n_slots: int = 4, max_len: int = 128,
-                 dist=LOCAL, eos_id: Optional[int] = None):
+                 dist=LOCAL, eos_id: Optional[int] = None,
+                 warmup: bool = False):
         self.cfg, self.params, self.dist = cfg, params, dist
         self.n_slots, self.max_len = n_slots, max_len
         self.eos_id = eos_id
@@ -62,6 +63,20 @@ class ContinuousBatcher:
         self.cache["start"] = jnp.zeros((n_slots,), jnp.int32)
         self._step = jax.jit(
             lambda c, t: decode_step(params, cfg, c, t, dist))
+        if warmup:
+            # AOT-compile the decode step before the first request arrives.
+            # Tracing it resolves every GEMM call-site's GemmPlan (the plan
+            # cache is keyed on static shapes), so serving never pays plan
+            # resolution or compilation inside the request loop.
+            tok0 = jnp.zeros((n_slots, 1), jnp.int32)
+            self._step = self._step.lower(self.cache, tok0).compile()
+
+    def numerics_info(self) -> dict:
+        """GemmPlan cache + call-site report for this engine's decode step
+        (introspection: what the dispatch layer planned for serving)."""
+        from repro.core import dispatch
+        return {"plans": dispatch.plan_cache_info(),
+                "sites": sorted(dispatch.sites_seen())}
 
     def submit(self, req: Request):
         self.queue.append(req)

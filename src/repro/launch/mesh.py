@@ -18,5 +18,19 @@ def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     return jax.make_mesh(shape, axes)
 
 
+def abstract_mesh(shape, axes):
+    """Version-compatible ``jax.sharding.AbstractMesh`` constructor.
+
+    JAX changed the signature across releases: 0.4.x takes a single tuple of
+    (name, size) pairs, newer versions take positional (sizes, names). Build
+    from pairs first and fall back, so callers never touch the raw API."""
+    from jax.sharding import AbstractMesh
+    pairs = tuple(zip(axes, shape))
+    try:
+        return AbstractMesh(pairs)
+    except TypeError:
+        return AbstractMesh(tuple(shape), tuple(axes))
+
+
 def dp_axes_of(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

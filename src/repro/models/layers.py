@@ -71,13 +71,17 @@ def activate(x: Array, kind: str) -> Array:
 # ---------------------------------------------------------------------------
 # Dense projection through the numerics dispatch layer
 # ---------------------------------------------------------------------------
-def dense(x: Array, w: Array, site: str, bias: Optional[Array] = None) -> Array:
+def dense(x: Array, w: Array, site: str, bias: Optional[Array] = None,
+          plan: Optional["dispatch.GemmPlan"] = None) -> Array:
     """x (..., K) @ w (K, N) via the BLAS dispatch; returns x.dtype.
 
     Leading dims are passed through un-flattened: a reshape that merged a
     data-sharded batch dim with a model-sharded sequence dim would force XLA
-    to all-gather the activations (unrepresentable merged sharding)."""
-    out = dispatch.gemm(x, w, site=site)
+    to all-gather the activations (unrepresentable merged sharding).
+
+    ``plan`` pins Pallas block sizes for this call-site; by default the
+    dispatch layer resolves one from its GemmPlan cache per operand shape."""
+    out = dispatch.gemm(x, w, site=site, plan=plan)
     if bias is not None:
         out = out + bias
     return out.astype(x.dtype)

@@ -27,10 +27,7 @@ from repro.core import dispatch
 
 from .layers import Distribution, activate
 
-try:  # jax >= 0.6 exports shard_map at top level
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
+from repro.parallel.compat import shard_map_unchecked
 
 
 def init_moe(key, d: int, f: int, n_experts: int, dtype=jnp.float32):
@@ -110,12 +107,12 @@ def moe_block(x, p, cfg, dist: Distribution, site: str = "moe"):
             y = _moe_inner(x_loc.reshape(-1, d), rw, wi, wg, wo, cfg)
             return jax.lax.psum(y.reshape(bl, s, d), axes)
 
-        return shard_map(
+        return shard_map_unchecked(
             f, mesh=dist.mesh,
             in_specs=(P(None, None, None), P(None, None),
                       P(None, None, axes), P(None, None, axes),
                       P(None, axes, None)),
-            out_specs=P(None, None, None), check_vma=False,
+            out_specs=P(None, None, None),
         )(x, p["router"], p["w_in"], p["w_gate"], p["w_out"])
     else:
         def f(x_loc, rw, wi, wg, wo):
@@ -127,11 +124,11 @@ def moe_block(x, p, cfg, dist: Distribution, site: str = "moe"):
 
         x_spec, y_spec = P(dp, None, None), P(dp, None, None)
 
-    return shard_map(
+    return shard_map_unchecked(
         f, mesh=dist.mesh,
         in_specs=(x_spec, P(None, None),
                   P(None, None, tp), P(None, None, tp), P(None, tp, None)),
-        out_specs=y_spec, check_vma=False,
+        out_specs=y_spec,
     )(x, p["router"], p["w_in"], p["w_gate"], p["w_out"])
 
 
@@ -199,9 +196,9 @@ def moe_block_ep(x, p, cfg, dist: Distribution, site: str = "moe",
         out_tok = jnp.zeros((T + 1, d), jnp.float32).at[dest_tok].add(contrib)[:T]
         return out_tok.astype(x_loc.dtype).reshape(bl, sl, d)
 
-    return shard_map(
+    return shard_map_unchecked(
         f, mesh=dist.mesh,
         in_specs=(P(dp, tp, None), P(None, None),
                   P(tp, None, None), P(tp, None, None), P(tp, None, None)),
-        out_specs=P(dp, tp, None), check_vma=False,
+        out_specs=P(dp, tp, None),
     )(x, p["router"], p["w_in"], p["w_gate"], p["w_out"])

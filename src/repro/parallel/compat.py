@@ -1,0 +1,23 @@
+"""Version shims for JAX APIs whose signatures changed across releases."""
+
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.6 exports shard_map at top level
+    _shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map_unchecked(f, *, mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking disabled.
+
+    The flag was renamed ``check_rep`` -> ``check_vma`` across JAX releases;
+    try the new name first so both old (0.4.x) and new JAX work."""
+    try:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+    except TypeError:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)

@@ -19,10 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-try:
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
+from repro.parallel.compat import shard_map_unchecked
 
 
 def pipeline_apply(body, params_stacked, x_micro, mesh, stage_axis="stage"):
@@ -72,8 +69,7 @@ def pipeline_apply(body, params_stacked, x_micro, mesh, stage_axis="stage"):
         return outputs
 
     pspec = jax.tree.map(lambda _: P(stage_axis), params_stacked)
-    return shard_map(
+    return shard_map_unchecked(
         stage_fn, mesh=mesh,
         in_specs=(pspec, P()), out_specs=P(),
-        check_vma=False,
     )(params_stacked, x_micro)

@@ -12,10 +12,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-try:
-    shard_map = jax.shard_map
-except AttributeError:
-    from jax.experimental.shard_map import shard_map
+from repro.parallel.compat import shard_map_unchecked
 
 from repro.core.accumulator import AccumulatorSpec
 from repro.core.dispatch import use_policy, MXU_FP32
@@ -36,13 +33,13 @@ def check_reproducible_psum():
     def f(xl):
         return reproducible_psum(xl[0], "dp", spec)
 
-    out = shard_map(f, mesh=mesh, in_specs=P("dp"), out_specs=P(),
-                    check_vma=False)(x)
+    out = shard_map_unchecked(f, mesh=mesh, in_specs=P("dp"),
+                              out_specs=P())(x)
     ref = np.asarray(x).sum(0)
     np.testing.assert_allclose(np.asarray(out), ref, atol=8 * 2.0 ** -16)
     # determinism across two calls
-    out2 = shard_map(f, mesh=mesh, in_specs=P("dp"), out_specs=P(),
-                     check_vma=False)(x)
+    out2 = shard_map_unchecked(f, mesh=mesh, in_specs=P("dp"),
+                               out_specs=P())(x)
     assert jnp.array_equal(out, out2)
     print("CHECK reproducible_psum OK")
 
@@ -135,8 +132,8 @@ def check_compressed_grads():
         out, new_r = red.reduce({"g": gl}, {"g": r})
         return out["g"], new_r["g"]
 
-    out, resid = shard_map(f, mesh=mesh, in_specs=P("dp"),
-                           out_specs=(P(), P("dp")), check_vma=False)(g)
+    out, resid = shard_map_unchecked(f, mesh=mesh, in_specs=P("dp"),
+                                     out_specs=(P(), P("dp")))(g)
     ref = np.asarray(g).mean(0)
     # coarse grid: error bounded by grid step; residual carries the rest
     assert np.abs(np.asarray(out) - ref).max() < 2.0 ** -8 * 2

@@ -1,0 +1,141 @@
+"""Batched Pallas path: (B,M,K)@(B,K,N) through ``dispatch.gemm`` (pallas
+mode, native 4-D grid) must be bit-identical to the per-batch ``fdp.fdp_gemm``
+simulation — including non-block-multiple shapes, batch broadcasting and
+posit (int32 bit-pattern) inputs — and the GemmPlan cache must serve it."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import AccumulatorSpec, FP32, POSIT16_1
+from repro.core import fdp
+from repro.core.dispatch import (GemmConfig, GemmPlan, NumericsPolicy, gemm,
+                                 plan_cache_info, plan_gemm, use_policy)
+from repro.kernels import ops as kops
+
+SPEC = AccumulatorSpec.paper_91bit()
+
+
+def _pallas_policy(fmt=FP32, spec=SPEC):
+    return NumericsPolicy(GemmConfig(fmt, spec, "pallas"))
+
+
+@pytest.mark.parametrize("B,M,K,N", [
+    (3, 8, 32, 8),          # block-aligned
+    (2, 17, 70, 9),         # nothing divides the blocks
+    (4, 1, 128, 5),         # degenerate rows
+    (1, 33, 257, 3),        # B=1 still goes through the batched grid
+], ids=str)
+def test_batched_bitexact_vs_simulation(B, M, K, N, rng):
+    A = (rng.standard_normal((B, M, K)) * 3).astype(np.float32)
+    Bv = (rng.standard_normal((B, K, N)) * 3).astype(np.float32)
+    with use_policy(_pallas_policy()):
+        got = np.asarray(gemm(jnp.asarray(A), jnp.asarray(Bv), site="t"))
+    assert got.shape == (B, M, N)
+    for i in range(B):
+        ref = np.asarray(fdp.fdp_gemm(jnp.asarray(A[i]), jnp.asarray(Bv[i]),
+                                      SPEC, FP32))
+        np.testing.assert_array_equal(got[i], ref)
+
+
+def test_batched_kernel_equals_vmapped_2d(rng):
+    """The native 4-D grid == vmap of the 2-D kernel, bit for bit."""
+    A = jnp.asarray(rng.standard_normal((3, 24, 96)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((3, 96, 16)), jnp.float32)
+    got = kops.fdp_gemm_batched(A, B, spec=SPEC, bm=8, bn=8, bk=32)
+    ref = jax.vmap(lambda x, y: kops.fdp_gemm(x, y, spec=SPEC,
+                                              bm=8, bn=8, bk=32))(A, B)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_batch_broadcasting(rng):
+    """Leading batch dims broadcast numpy-style before the batched grid."""
+    A = jnp.asarray(rng.standard_normal((2, 1, 9, 33)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((3, 33, 7)), jnp.float32)
+    with use_policy(_pallas_policy()):
+        got = np.asarray(gemm(A, B, site="t"))
+    assert got.shape == (2, 3, 9, 7)
+    for i in range(2):
+        for j in range(3):
+            ref = np.asarray(fdp.fdp_gemm(A[i, 0], B[j], SPEC, FP32))
+            np.testing.assert_array_equal(got[i, j], ref)
+
+
+def test_batched_posit_inputs(rng):
+    """Posit16 int32 bit patterns flow through the batched grid bit-exactly."""
+    av = rng.standard_normal((2, 8, 24)).astype(np.float32)
+    bv = rng.standard_normal((2, 24, 8)).astype(np.float32)
+    ap = POSIT16_1.from_float(jnp.asarray(av))
+    bp = POSIT16_1.from_float(jnp.asarray(bv))
+    with use_policy(_pallas_policy(fmt=POSIT16_1)):
+        got = np.asarray(gemm(ap, bp, site="t"))
+    for i in range(2):
+        ref = np.asarray(fdp.fdp_gemm(ap[i], bp[i], SPEC, POSIT16_1))
+        np.testing.assert_array_equal(got[i], ref)
+
+
+def test_batched_under_jit(rng):
+    """dispatch.gemm(mode=pallas) plans from static shapes inside a trace."""
+    A = jnp.asarray(rng.standard_normal((2, 12, 40)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((2, 40, 6)), jnp.float32)
+    pol = _pallas_policy()
+
+    @jax.jit
+    def f(x, y):
+        return gemm(x, y, site="t", policy=pol)
+
+    got = np.asarray(f(A, B))
+    for i in range(2):
+        ref = np.asarray(fdp.fdp_gemm(A[i], B[i], SPEC, FP32))
+        np.testing.assert_array_equal(got[i], ref)
+
+
+def test_1d_promotion_matches_matmul(rng):
+    """Vector operands follow jnp.matmul semantics through every mode,
+    including the vector·vector scalar case."""
+    v = jnp.asarray(rng.standard_normal(33), jnp.float32)
+    w = jnp.asarray(rng.standard_normal(33), jnp.float32)
+    A = jnp.asarray(rng.standard_normal((9, 33)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((2, 33, 7)), jnp.float32)
+    for mode in ("pallas", "simulate"):
+        with use_policy(_pallas_policy() if mode == "pallas" else
+                        NumericsPolicy(GemmConfig(FP32, SPEC, "simulate"))):
+            s = gemm(v, w, site="t")          # (33,)@(33,) -> scalar
+            mv = gemm(A, w, site="t")         # (9,33)@(33,) -> (9,)
+            vb = gemm(v, B, site="t")         # (33,)@(2,33,7) -> (2,7)
+        assert s.shape == ()
+        assert mv.shape == (9,)
+        assert vb.shape == (2, 7)
+        # f32-matmul reference carries its own rounding; this checks the
+        # promotion plumbing, not exactness (covered by the oracle tests)
+        np.testing.assert_allclose(float(s), float(v @ w),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_autotune_upgrades_heuristic_cache_entry():
+    """plan_gemm(autotune=True) re-measures a cached heuristic plan instead
+    of returning it, and the measured result sticks."""
+    m, n, k = 16, 16, 32
+    p0 = plan_gemm(m, n, k, fmt=FP32, spec=SPEC)
+    assert p0.source == "heuristic"
+    p1 = plan_gemm(m, n, k, fmt=FP32, spec=SPEC, autotune=True)
+    assert p1.source == "measured"
+    p2 = plan_gemm(m, n, k, fmt=FP32, spec=SPEC, autotune=True)
+    assert p2 == p1                       # measured entry is not re-measured
+
+
+def test_plan_cache_hits_and_override(rng):
+    info0 = plan_cache_info()
+    p1 = plan_gemm(64, 64, 256, fmt=FP32, spec=SPEC)
+    p2 = plan_gemm(64, 64, 256, fmt=FP32, spec=SPEC)
+    assert p1 == p2
+    info1 = plan_cache_info()
+    assert info1["hits"] >= info0["hits"] + 1
+    # an explicit plan override is honored end-to-end
+    A = jnp.asarray(rng.standard_normal((9, 33)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((33, 7)), jnp.float32)
+    with use_policy(_pallas_policy()):
+        got = gemm(A, B, site="t", plan=GemmPlan(8, 8, 16))
+    ref = fdp.fdp_gemm(A, B, SPEC, FP32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))

@@ -3,7 +3,7 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import BF16, FP16, FP32, POSIT8_0, POSIT16_1, POSIT32_2
 

@@ -21,6 +21,7 @@ SHAPES = [
 ]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.describe())
 @pytest.mark.parametrize("shape", SHAPES, ids=str)
 def test_kernel_bitexact_f32(spec, shape, rng):
@@ -88,4 +89,6 @@ def test_kernel_exactness_vs_f64(rng):
     got = np.asarray(pallas_gemm(jnp.asarray(A), jnp.asarray(B), spec=spec,
                                  bm=8, bn=8, bk=256))
     ref64 = A.astype(np.float64) @ B.astype(np.float64)
-    np.testing.assert_allclose(got, ref64, rtol=2e-7)
+    # per-product RTZ at 2^-30 bounds |err| by K * 2^-30 absolutely; small
+    # outputs (random cancellation) need that floor on top of rtol.
+    np.testing.assert_allclose(got, ref64, rtol=2e-7, atol=512 * 2.0 ** -30)

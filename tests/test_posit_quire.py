@@ -4,7 +4,7 @@ instance of the paper's accumulator family)."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import AccumulatorSpec, POSIT8_0, POSIT16_1
 from repro.core.fdp import fdp_dot_posit
