@@ -11,19 +11,29 @@ Two sections:
     engine at (M,N,K) = (256, 256, 1024), measured against the seed per-k
     scalar-loop kernel (kept as ``impl="loop"``) with a bit-exactness check —
     the speedup this PR's execution engine is accountable for.
+
+``--json out.json`` additionally writes every row machine-readably
+(per-impl/per-shape wall time + modeled energy) so benchmark trajectories
+can be tracked across commits (CI uploads it as an artifact); ``--quick``
+trims the table and skips the hot-path sweep for bounded CI lanes.
 """
 
+import argparse
+import json
+import platform
 import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import (AccumulatorSpec, FP32, BF16, GemmPlan, generate_gemm,
+from repro.core import (AccumulatorSpec, FP32, GemmPlan, generate_gemm,
                         plan_gemm)
+from repro.core.energy import FREQ_HZ, gemm_power
 from repro.kernels import ops as kops
 
 SHAPES = [(64, 256, 64), (128, 512, 128)]
+QUICK_SHAPES = [(32, 128, 32)]
 SPECS = [AccumulatorSpec.paper_91bit(), AccumulatorSpec(9, 6, -20)]
 
 # Hot-path acceptance shape and the seed kernel's hardcoded tile.
@@ -32,6 +42,34 @@ SEED_TILE = (32, 32, 128)
 SWEEP_TILES = [(32, 32, 128), (32, 32, 512), (64, 64, 512), (128, 128, 512),
                (128, 128, 1024)]
 
+ROWS: list = []                 # machine-readable mirror of every CSV line
+
+
+def emit(name, seconds_per_call, derived, *, shape=None, spec=None,
+         impl=None, unit="us"):
+    """Print the classic CSV line and mirror it into ROWS for --json."""
+    val = seconds_per_call * 1e6 if unit == "us" else seconds_per_call
+    fmtv = f"{val:.0f}" if unit == "us" else f"{val:.2f}"
+    print(f"{name},{fmtv},{derived}")
+    row = {"name": name, "seconds_per_call": seconds_per_call,
+           "derived": derived}
+    if impl:
+        row["impl"] = impl
+    if shape is not None:
+        M, K, N = shape
+        macs = M * K * N
+        row["shape"] = {"M": M, "K": K, "N": N}
+        if seconds_per_call > 0:
+            row["gflops"] = 2 * macs / seconds_per_call / 1e9
+        if spec is not None or impl == "native":
+            p = gemm_power(FP32, spec)
+            row["modeled"] = {
+                "watts_fpga": p.watts,
+                "energy_j_per_call": p.energy_joules(macs),
+                "freq_hz": FREQ_HZ,
+            }
+    ROWS.append(row)
+
 
 def timeit(fn, *args, reps=3):
     fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
@@ -39,32 +77,34 @@ def timeit(fn, *args, reps=3):
     t0 = time.perf_counter()
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / reps * 1e6
+    return (time.perf_counter() - t0) / reps
 
 
-def run_table():
+def run_table(shapes=SHAPES, specs=SPECS):
     rng = np.random.default_rng(0)
     print("name,us_per_call,derived")
-    for (M, K, N) in SHAPES:
+    for (M, K, N) in shapes:
         a = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
         b = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
         flops = 2 * M * K * N
 
         g_native = generate_gemm(None, FP32, "native")
-        us = timeit(g_native.fn, a, b)
-        print(f"gemm_native_f32_{M}x{K}x{N},{us:.0f},"
-              f"GFLOPs={flops/us/1e3:.2f}|{g_native.report.describe()!r}")
+        s = timeit(g_native.fn, a, b)
+        emit(f"gemm_native_f32_{M}x{K}x{N}", s,
+             f"GFLOPs={flops/s/1e9:.2f}|{g_native.report.describe()!r}",
+             shape=(M, K, N), impl="native")
 
-        for spec in SPECS:
+        for spec in specs:
             for target in ("simulate", "pallas"):
                 g = generate_gemm(spec, FP32, target)       # tile: auto-plan
-                us = timeit(g.fn, a, b, reps=1)
+                s = timeit(g.fn, a, b, reps=1)
                 r = g.report
-                print(f"gemm_{target}_w{spec.width}_{M}x{K}x{N},{us:.0f},"
-                      f"GFLOPs={flops/us/1e3:.3f}"
-                      f"|limbs={r.num_limbs}|intops/mac={r.int_ops_per_mac}"
-                      f"|pJ/MAC={r.pj_per_mac_tpu_model:.1f}"
-                      f"|P_fpga={r.watts_fpga_model:.3f}W")
+                emit(f"gemm_{target}_w{spec.width}_{M}x{K}x{N}", s,
+                     f"GFLOPs={flops/s/1e9:.3f}"
+                     f"|limbs={r.num_limbs}|intops/mac={r.int_ops_per_mac}"
+                     f"|pJ/MAC={r.pj_per_mac_tpu_model:.1f}"
+                     f"|P_fpga={r.watts_fpga_model:.3f}W",
+                     shape=(M, K, N), spec=spec, impl=target)
     # bit-exactness cross-check at bench shapes
     spec = AccumulatorSpec.paper_91bit()
     gs = generate_gemm(spec, FP32, "simulate")
@@ -72,7 +112,7 @@ def run_table():
     a = jnp.asarray(rng.standard_normal((48, 160)), jnp.float32)
     b = jnp.asarray(rng.standard_normal((160, 24)), jnp.float32)
     same = bool(jnp.array_equal(gs.fn(a, b), gp.fn(a, b)))
-    print(f"gemm_parity_check,0,bitexact={same}")
+    emit("gemm_parity_check", 0, f"bitexact={same}")
     assert same
 
 
@@ -108,16 +148,18 @@ def run_hotpath():
             lambda: kops.fdp_gemm(a, b, spec=spec, bm=SEED_TILE[0],
                                   bn=SEED_TILE[1], bk=SEED_TILE[2],
                                   impl="loop"))
-        print(f"pallas_seed_loop_w{spec.width}_"
-              f"{'x'.join(map(str, SEED_TILE))},{t_seed:.2f},"
-              f"GFLOPs={flops/t_seed/1e9:.3f}")
+        emit(f"pallas_seed_loop_w{spec.width}_"
+             f"{'x'.join(map(str, SEED_TILE))}", t_seed,
+             f"GFLOPs={flops/t_seed/1e9:.3f}",
+             shape=(M, K, N), spec=spec, impl="pallas_loop", unit="s")
 
         best = (None, float("inf"), None)
         for bm, bn, bk in SWEEP_TILES:
             t, out = _best_of(
                 lambda: kops.fdp_gemm(a, b, spec=spec, bm=bm, bn=bn, bk=bk))
-            print(f"pallas_vector_w{spec.width}_{bm}x{bn}x{bk},{t:.2f},"
-                  f"GFLOPs={flops/t/1e9:.3f}|speedup={t_seed/t:.1f}x")
+            emit(f"pallas_vector_w{spec.width}_{bm}x{bn}x{bk}", t,
+                 f"GFLOPs={flops/t/1e9:.3f}|speedup={t_seed/t:.1f}x",
+                 shape=(M, K, N), spec=spec, impl="pallas_vector", unit="s")
             if t < best[1]:
                 best = ((bm, bn, bk), t, out)
 
@@ -125,29 +167,61 @@ def run_hotpath():
         t_plan, out_plan = _best_of(
             lambda: kops.fdp_gemm(a, b, spec=spec, bm=plan.bm, bn=plan.bn,
                                   bk=plan.bk))
-        print(f"pallas_vector_planned_w{spec.width}_"
-              f"{plan.bm}x{plan.bn}x{plan.bk},{t_plan:.2f},"
-              f"GFLOPs={flops/t_plan/1e9:.3f}|source={plan.source}"
-              f"|speedup={t_seed/t_plan:.1f}x")
+        emit(f"pallas_vector_planned_w{spec.width}_"
+             f"{plan.bm}x{plan.bn}x{plan.bk}", t_plan,
+             f"GFLOPs={flops/t_plan/1e9:.3f}|source={plan.source}"
+             f"|speedup={t_seed/t_plan:.1f}x",
+             shape=(M, K, N), spec=spec, impl="pallas_vector_planned",
+             unit="s")
 
         exact &= bool(jnp.array_equal(out_seed, out_plan)) and \
             bool(jnp.array_equal(out_seed, best[2]))
         speedups[f"w{spec.width}"] = t_seed / min(t_plan, best[1])
-        print(f"hotpath_w{spec.width},0,best_tile={best[0]}"
-              f"|speedup={speedups[f'w{spec.width}']:.1f}x|bitexact={exact}")
+        emit(f"hotpath_w{spec.width}", 0,
+             f"best_tile={best[0]}"
+             f"|speedup={speedups[f'w{spec.width}']:.1f}x|bitexact={exact}")
 
     top = max(speedups.values())
     detail = "|".join(f"{k}={v:.1f}x" for k, v in speedups.items())
-    print(f"\nhotpath_summary,0,{detail}|best={top:.1f}x|bitexact={exact}")
+    print()
+    emit("hotpath_summary", 0, f"{detail}|best={top:.1f}x|bitexact={exact}")
     assert exact, "vectorized engine output diverged from the seed kernel"
     assert top >= 5.0, (
         f"hot-path speedup {detail} never reached the 5x acceptance bar")
 
 
-def run():
-    run_table()
-    run_hotpath()
+def run(quick: bool = False, json_path: str | None = None):
+    ROWS.clear()
+    t0 = time.time()
+    if quick:
+        run_table(shapes=QUICK_SHAPES, specs=[SPECS[0]])
+    else:
+        run_table()
+        run_hotpath()
+    if json_path:
+        doc = {
+            "bench": "bench_gemm",
+            "quick": quick,
+            "backend": jax.default_backend(),
+            "platform": platform.platform(),
+            "wall_seconds": time.time() - t0,
+            "rows": ROWS,
+        }
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+        print(f"# wrote {len(ROWS)} rows to {json_path}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write machine-readable rows (BENCH_gemm.json)")
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes, no hot-path sweep (CI lane)")
+    args = ap.parse_args(argv)
+    run(quick=args.quick, json_path=args.json)
 
 
 if __name__ == "__main__":
-    run()
+    main()

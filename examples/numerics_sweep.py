@@ -1,35 +1,100 @@
-"""The paper's core experiment as an example: sweep ⟨ovf,msb,lsb⟩ for one
-workload and print the accuracy/energy trade-off + the generator's datapath
-reports (Fig. 3 in miniature).
+"""The paper's core experiment, run *automatically*: trace a model's GEMM
+call-sites, search the per-site (format x accumulator x backend) space, and
+emit a deployable PrecisionPlan — Fig. 3's design-space sweep as a subsystem
+(repro.numerics) instead of a hand-picked table.
 
-    PYTHONPATH=src python examples/numerics_sweep.py
+    PYTHONPATH=src python examples/numerics_sweep.py                # full
+    PYTHONPATH=src python examples/numerics_sweep.py --reduced      # CI smoke
+    PYTHONPATH=src python examples/numerics_sweep.py \
+        --out examples/plans/paper_mlp.json                         # refresh
+                                                   # the checked-in fixture
+
+Pipeline: (1) calibrate — one forward pass of the paper-MLP workload records
+per-site operand statistics; (2) enumerate + evaluate — each site's pruned
+candidate grid is replayed on its captured sample against a bit-exact FDP
+oracle; (3) greedy Pareto search meets the end-to-end error budget at
+minimum modeled energy (validated against the uniform ⟨30,30,-30⟩ policy);
+(4) the plan serializes to JSON and loads back into a NumericsPolicy.
 """
+
+import argparse
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import AccumulatorSpec, BF16, FP32
-from repro.core import energy
-from repro.core.dispatch import GemmConfig, NumericsPolicy, use_policy
-from repro.core.fdp import fdp_gemm
+from repro.configs import get_config
+from repro.core.dispatch import FDP91, MXU_FP32, use_policy
 from repro.core.metrics import correct_bits
+from repro.models import forward, init, LOCAL
+from repro.numerics import calibrate, load_plan, search
 
-rng = np.random.default_rng(0)
-M, K, N = 32, 512, 16
-a = jnp.asarray(rng.standard_normal((M, K)) * 0.1, jnp.float32)
-b = jnp.asarray(rng.standard_normal((K, N)) * 0.1, jnp.float32)
-exact = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
 
-print(f"{'accumulator':28s} {'bits':>6s} {'watts':>7s} {'pJ/MAC':>7s}")
-for msb, lsb in [(2, -4), (6, -8), (6, -20), (10, -30), (30, -30)]:
-    spec = AccumulatorSpec(ovf=9, msb=msb, lsb=lsb)
-    got = np.asarray(fdp_gemm(a, b, spec, FP32))
-    bits = float(np.median(correct_bits(got, exact, cap=24)))
-    p = energy.spec_power(FP32, spec)
-    pj = energy.tpu_fdp_pj_per_mac(FP32.precision, spec.num_limbs)
-    print(f"<ovf:9, msb:{msb:3d}, lsb:{lsb:3d}>   {bits:6.1f} "
-          f"{p.watts:7.3f} {pj:7.1f}")
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny config + small grid (CI smoke)")
+    ap.add_argument("--budget", type=float, default=10.0,
+                    help="end-to-end error budget in correct bits")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--out", default=None,
+                    help="write the PrecisionPlan JSON here")
+    args = ap.parse_args(argv)
 
-print("\n(the paper's point: pick the cheapest accumulator that still meets "
-      "the workload's accuracy bar)")
+    cfg = get_config("paper-mlp")
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.seq is None:
+        args.seq = 8 if args.reduced else 16
+    params = init(cfg, jax.random.key(0))
+    batch = {"tokens": jax.random.randint(
+        jax.random.key(1), (args.batch, args.seq), 0, cfg.vocab_size)}
+
+    # (1) calibration trace: one forward pass under the fast native policy
+    print(f"== calibrating {cfg.name} "
+          f"(batch={args.batch}, seq={args.seq}) ==")
+    with calibrate() as trace, use_policy(MXU_FP32):
+        jax.block_until_ready(forward(params, cfg, batch, LOCAL,
+                                      remat="none"))
+    print(trace.summary())
+
+    # (2)+(3) search with end-to-end validation vs the uniform FDP oracle
+    with use_policy(FDP91):
+        ref = np.asarray(forward(params, cfg, batch, LOCAL, remat="none"))
+
+    def validate(policy):
+        with use_policy(policy):
+            out = np.asarray(forward(params, cfg, batch, LOCAL, remat="none"))
+        return float(np.median(correct_bits(out, ref, cap=24)))
+
+    grid = (dict(widths=(32,)) if args.reduced
+            else dict(widths=(24, 40, 64)))
+    print(f"\n== searching (budget {args.budget} bits) ==")
+    res = search(trace, budget_bits=args.budget, name=cfg.name,
+                 validate=validate, **grid)
+    print(res.describe())
+
+    # per-site frontier detail (the Fig. 3 sweep, per call-site)
+    print("\n== per-site Pareto frontiers (bits / modeled J) ==")
+    for site, d in sorted(res.decisions.items()):
+        pts = " | ".join(f"{p.candidate.tag} "
+                         f"{p.error_bits:.1f}b {p.energy_j:.1e}J"
+                         for p in d.frontier)       # already Pareto-filtered
+        print(f"  {site:14s} {pts}")
+
+    # (4) serialize + reload
+    if args.out:
+        res.plan.save(args.out)
+        back = load_plan(args.out)
+        assert back.to_policy().lookup(res.plan.sites[0].site).tag() == \
+            res.plan.sites[0].cfg.tag()
+        print(f"\nplan written to {args.out} (reload OK)")
+
+    print("\n(the paper's point, automated: each site gets the cheapest "
+          "accumulator that still meets the workload's accuracy bar)")
+    return res
+
+
+if __name__ == "__main__":
+    main()

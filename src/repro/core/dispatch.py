@@ -78,8 +78,15 @@ class NumericsPolicy:
 
 MXU_BF16 = NumericsPolicy(GemmConfig(BF16, None, "native"), name="mxu_bf16")
 MXU_FP32 = NumericsPolicy(GemmConfig(FP32, None, "native"), name="mxu_fp32")
+# The paper's flagship uniform numerics: every site through the bit-exact
+# ⟨30,30,-30⟩ FDP. This is the accuracy oracle the tailoring search in
+# ``repro.numerics`` compares candidate plans against.
+FDP91 = NumericsPolicy(
+    GemmConfig(FP32, AccumulatorSpec(ovf=30, msb=30, lsb=-30), "simulate"),
+    name="fdp91_uniform")
 
 _state = threading.local()
+_UNSET = object()
 
 
 def current_policy() -> NumericsPolicy:
@@ -88,13 +95,25 @@ def current_policy() -> NumericsPolicy:
 
 @contextlib.contextmanager
 def use_policy(policy: NumericsPolicy):
-    """Swap the process-wide numerics (the LD_PRELOAD moment)."""
-    prev = current_policy()
+    """Swap the *per-thread* numerics (the LD_PRELOAD moment).
+
+    Exception-safe and re-entrant: the previous state is restored even when
+    the body raises, and a thread that never entered a policy context goes
+    back to the process default (rather than having the default pinned onto
+    it). The underlying state is ``threading.local`` so a policy installed
+    in one thread never leaks into another.
+    """
+    if not isinstance(policy, NumericsPolicy):
+        raise TypeError(f"use_policy expects a NumericsPolicy, got {policy!r}")
+    prev = getattr(_state, "policy", _UNSET)
     _state.policy = policy
     try:
         yield policy
     finally:
-        _state.policy = prev
+        if prev is _UNSET:
+            del _state.policy
+        else:
+            _state.policy = prev
 
 
 _SITES_SEEN: set = set()
@@ -103,6 +122,32 @@ _SITES_SEEN: set = set()
 def sites_seen() -> frozenset:
     """All GEMM call-sites traced so far (introspection/report)."""
     return frozenset(_SITES_SEEN)
+
+
+# ---------------------------------------------------------------------------
+# Calibration tracing hook (repro.numerics)
+# ---------------------------------------------------------------------------
+# When a hook is installed (see repro.numerics.trace.calibrate), every
+# dispatched GEMM reports (site, cfg, a, b, out) so the tailoring subsystem
+# can record per-site operand statistics. The hook runs at *trace* time, so
+# it may stage jnp ops / jax.debug.callback into the computation; it must be
+# None-checked here to keep the production path zero-cost.
+_TRACE_HOOK = None
+
+
+def set_trace_hook(hook):
+    """Install (or clear, with None) the calibration hook. Returns the
+    previously installed hook so callers can restore it."""
+    global _TRACE_HOOK
+    prev = _TRACE_HOOK
+    _TRACE_HOOK = hook
+    return prev
+
+
+def _maybe_trace(site, cfg, a, b, out):
+    if _TRACE_HOOK is not None:
+        _TRACE_HOOK(site, cfg, a, b, out)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -278,19 +323,27 @@ def gemm(a: Array, b: Array, *, site: str = "generic",
 
     if cfg.mode == "native":
         dt = cfg.fmt.jnp_dtype
-        return jnp.matmul(a.astype(dt), b.astype(dt),
-                          preferred_element_type=jnp.float32)
+        out = jnp.matmul(a.astype(dt), b.astype(dt),
+                         preferred_element_type=jnp.float32)
+        return _maybe_trace(site, cfg, a, b, out)
+
+    # FDP modes: float inputs are rounded onto the format's grid first (the
+    # paper's format front end — bf16 under a wide accumulator really sees
+    # bf16 operands); posit carriers are already bit patterns.
+    if isinstance(cfg.fmt, FloatFormat):
+        a, b = cfg.fmt.quantize(a), cfg.fmt.quantize(b)
 
     if cfg.mode == "simulate":
         from . import fdp
         f = lambda x, y: fdp.fdp_gemm(x, y, cfg.acc, cfg.fmt)
-        return _batched_apply(f, a, b)
+        return _maybe_trace(site, cfg, a, b, _batched_apply(f, a, b))
 
     # pallas: plan-cached block sizes, native batched grid for N-D inputs
     from repro.kernels import ops as kops
     plan = plan or _plan_for_operands(a, b, cfg)
-    return kops.fdp_gemm_nd(a, b, spec=cfg.acc, fmt=cfg.fmt,
-                            bm=plan.bm, bn=plan.bn, bk=plan.bk)
+    out = kops.fdp_gemm_nd(a, b, spec=cfg.acc, fmt=cfg.fmt,
+                           bm=plan.bm, bn=plan.bn, bk=plan.bk)
+    return _maybe_trace(site, cfg, a, b, out)
 
 
 def _batched_apply(f, a: Array, b: Array) -> Array:
@@ -313,8 +366,16 @@ def grouped_qk(q: Array, k: Array, *, site: str = "attn_qk",
     _SITES_SEEN.add(site)
     if cfg.mode == "native":
         dt = cfg.fmt.jnp_dtype
-        return jnp.einsum("bkgqd,bksd->bkgqs", q.astype(dt), k.astype(dt),
-                          preferred_element_type=jnp.float32)
+        out = jnp.einsum("bkgqd,bksd->bkgqs", q.astype(dt), k.astype(dt),
+                         preferred_element_type=jnp.float32)
+        if _TRACE_HOOK is not None:
+            # report in jnp.matmul shape so the profiler sees the real
+            # contraction: (B,Kh,G*Sq,hd) x (B,Kh,hd,Sk)
+            B_, Kh_, G_, Sq_, hd_ = q.shape
+            _maybe_trace(site, cfg, q.reshape(B_, Kh_, G_ * Sq_, hd_),
+                         jnp.swapaxes(k, -1, -2),
+                         out.reshape(B_, Kh_, G_ * Sq_, -1))
+        return out
     B, Kh, G, Sq, hd = q.shape
     qf = q.reshape(B, Kh, G * Sq, hd)
     out = gemm(qf, jnp.swapaxes(k, -1, -2), site=site, policy=pol)
@@ -329,12 +390,24 @@ def grouped_av(p: Array, v: Array, *, site: str = "attn_av",
     _SITES_SEEN.add(site)
     if cfg.mode == "native":
         dt = cfg.fmt.jnp_dtype
-        return jnp.einsum("bkgqs,bksd->bkgqd", p.astype(dt), v.astype(dt),
-                          preferred_element_type=jnp.float32)
+        out = jnp.einsum("bkgqs,bksd->bkgqd", p.astype(dt), v.astype(dt),
+                         preferred_element_type=jnp.float32)
+        if _TRACE_HOOK is not None:
+            B_, Kh_, G_, Sq_, Sk_ = p.shape
+            _maybe_trace(site, cfg, p.reshape(B_, Kh_, G_ * Sq_, Sk_), v,
+                         out.reshape(B_, Kh_, G_ * Sq_, -1))
+        return out
     B, Kh, G, Sq, Sk = p.shape
     pf = p.reshape(B, Kh, G * Sq, Sk)
     out = gemm(pf, v, site=site, policy=pol)
     return out.reshape(B, Kh, G, Sq, v.shape[-1])
+
+
+def policy_from_plan(path) -> NumericsPolicy:
+    """Load a serialized ``repro.numerics`` PrecisionPlan and return the
+    NumericsPolicy it deploys (the ``--precision-plan`` entry point)."""
+    from repro.numerics import load_plan       # deferred: numerics imports us
+    return load_plan(path).to_policy()
 
 
 def quantize_inputs(x: Array, site: str = "generic",

@@ -93,6 +93,15 @@ def spec_power(fmt, spec) -> PowerReport:
     return fdp_power(fmt.precision, spec.width)
 
 
+def gemm_power(fmt, spec=None) -> PowerReport:
+    """Power of one GEMM processing element for a dispatch-level candidate:
+    ``spec=None`` is the conventional-FMA path at the format's precision
+    (the MXU/native point of the design space), otherwise the tailored FDP
+    at the accumulator's width. This is the per-candidate energy axis of the
+    ``repro.numerics`` Pareto search."""
+    return fma_power(fmt.precision) if spec is None else spec_power(fmt, spec)
+
+
 # --- sanity: reproduce the paper's three calibration points ---------------
 PAPER_POINTS = {
     "fp64_fma": (fma_power(53).watts, 0.266),

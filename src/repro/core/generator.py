@@ -79,8 +79,7 @@ def generate_gemm(spec: AccumulatorSpec | None,
             return jnp.dot(a.astype(dtype), b.astype(dtype),
                            preferred_element_type=jnp.float32)
 
-        spec_eff = spec or AccumulatorSpec(ovf=8, msb=128, lsb=-126)  # ~fp32 acc
-        rep = _report("native_mxu", fmt, spec_eff, "native", tile)
+        rep = _native_report("native_mxu", fmt, spec, tile)
         return GeneratedGemm(native, rep)
 
     if target == "simulate":
@@ -108,6 +107,42 @@ def generate_gemm(spec: AccumulatorSpec | None,
         return GeneratedGemm(fn, rep)
 
     raise ValueError(f"unknown target {target!r}")
+
+
+def datapath_report(spec: AccumulatorSpec | None,
+                    fmt: FloatFormat | PositFormat | str = FP32,
+                    target: str = "simulate",
+                    tile: tuple | None = None,
+                    name: str | None = None) -> DatapathReport:
+    """The generator's report alone, without compiling a kernel — what the
+    tailoring search in ``repro.numerics`` attaches to every candidate
+    ⟨format, accumulator, backend⟩ point so its Pareto axes (modeled watts,
+    pJ/MAC, VMEM) come from the same model as the generated datapaths.
+
+    ``spec=None`` describes the conventional-FPU native path (fp32
+    accumulate): FMA power model, MXU pJ/MAC, no limb machinery.
+    """
+    if isinstance(fmt, str):
+        fmt = get_format(fmt)
+    if spec is None or target == "native":
+        return _native_report(name or "native_mxu", fmt, spec, tile)
+    return _report(name or f"fdp_{target}", fmt, spec, target, tile)
+
+
+def _native_report(name, fmt, spec, tile):
+    """Report for the MXU/native fp32-accumulate path: the conventional-FMA
+    point of the design space (no limbs, no int-op algebra)."""
+    spec_eff = spec or AccumulatorSpec(ovf=8, msb=128, lsb=-126)  # ~fp32 acc
+    bm, bn, bk = tile if tile is not None else (128, 128, 1024)
+    vmem = (bm * bk + bk * bn) * 4 + bm * bn * 4
+    return DatapathReport(
+        name=name, fmt=fmt.name, spec=spec_eff, target="native",
+        num_limbs=0, digit_mults_per_mac=0, int_ops_per_mac=0,
+        vmem_bytes_per_tile=vmem,
+        tile=tile if tile is not None else "auto",
+        watts_fpga_model=energy.gemm_power(fmt, None).watts,
+        pj_per_mac_tpu_model=energy.TPU_PJ_PER_MXU_MAC,
+    )
 
 
 def _report(name, fmt, spec, target, tile):

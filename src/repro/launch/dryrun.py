@@ -370,7 +370,16 @@ def hlo_cost(hlo_text: str, default_trip: int = 1):
 # Cell runner
 # ---------------------------------------------------------------------------
 def run_cell(arch: str, shape_name: str, multi_pod: bool, moe_impl="tp",
-             remat="block", profile: str = "auto", kv_cache: str = "bf16"):
+             remat="block", profile: str = "auto", kv_cache: str = "bf16",
+             precision_plan: str | None = None):
+    if precision_plan:
+        # a numerics plan changes what lowers (native sites stay MXU dots,
+        # simulate/pallas sites lower their FDP limb algebra), so the whole
+        # build+compile runs under the plan's policy
+        from repro.core.dispatch import policy_from_plan, use_policy
+        with use_policy(policy_from_plan(precision_plan)):
+            return run_cell(arch, shape_name, multi_pod, moe_impl=moe_impl,
+                            remat=remat, profile=profile, kv_cache=kv_cache)
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     ok, why = shape_applicable(cfg, shape)
@@ -384,6 +393,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, moe_impl="tp",
     compiled = lowered.compile()
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):        # newer jax: one dict per device
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     scan_len = {"dense": cfg.n_layers, "moe": cfg.n_layers,
                 "vlm": cfg.n_layers, "ssm": cfg.n_layers,
@@ -451,6 +462,8 @@ def main(argv=None):
     ap.add_argument("--param-profile", default="auto",
                     choices=["auto", "fsdp", "ddp", "decode_tp"])
     ap.add_argument("--kv-cache", default="bf16", choices=["bf16", "int8"])
+    ap.add_argument("--precision-plan", default=None,
+                    help="lower under a repro.numerics PrecisionPlan JSON")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args(argv)
@@ -473,6 +486,8 @@ def main(argv=None):
             tag += f"_{args.param_profile}"
         if args.kv_cache != "bf16":
             tag += f"_kv{args.kv_cache}"
+        if args.precision_plan:
+            tag += "_planned"
         path = os.path.join(args.out, tag + ".json")
         if args.skip_existing and os.path.exists(path):
             print(f"[dryrun] {tag}: cached")
@@ -480,7 +495,8 @@ def main(argv=None):
         try:
             res = run_cell(arch, shape, mp, moe_impl=args.moe_impl,
                            remat=args.remat, profile=args.param_profile,
-                           kv_cache=args.kv_cache)
+                           kv_cache=args.kv_cache,
+                           precision_plan=args.precision_plan)
             with open(path, "w") as f:
                 json.dump(res, f, indent=1)
             if "skipped" in res:

@@ -4,17 +4,22 @@ cache, request batching, and per-request length masks.
 Local (CPU) example:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
         --batch 4 --prompt-len 12 --gen 16
+
+``--precision-plan plan.json`` serves under a numerics plan produced by the
+``repro.numerics`` tailoring search instead of the default uniform policy.
 """
 
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
+from repro.core.dispatch import policy_from_plan, use_policy
 from repro.models import decode_step, forward, init, init_cache, LOCAL
 from repro.models.transformer import prefill
 
@@ -48,6 +53,8 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--precision-plan", default=None,
+                    help="serve under a repro.numerics PrecisionPlan JSON")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -57,12 +64,16 @@ def main(argv=None):
     prompts = jax.random.randint(jax.random.key(1),
                                  (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
+    ctx = (use_policy(policy_from_plan(args.precision_plan))
+           if args.precision_plan else contextlib.nullcontext())
     t0 = time.time()
-    toks = serve(cfg, params, prompts, args.gen)
+    with ctx:
+        toks = serve(cfg, params, prompts, args.gen)
     dt = time.time() - t0
+    plan_note = f" plan={args.precision_plan}" if args.precision_plan else ""
     print(f"[serve] {args.arch}: batch={args.batch} prompt={args.prompt_len} "
           f"gen={args.gen} in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s)")
+          f"({args.batch * args.gen / dt:.1f} tok/s){plan_note}")
     print("sample:", toks[0].tolist())
 
 

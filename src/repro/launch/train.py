@@ -10,7 +10,7 @@ only built when requested so CPU runs stay single-device).
 from __future__ import annotations
 
 import argparse
-import dataclasses
+import contextlib
 import json
 import time
 
@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core.accumulator import AccumulatorSpec
+from repro.core.dispatch import policy_from_plan, use_policy
 from repro.data.synthetic import SyntheticLM
 from repro.models.layers import Distribution, LOCAL
 from repro.train.loop import Trainer, make_train_step
@@ -38,6 +39,8 @@ def main(argv=None):
     ap.add_argument("--save-every", type=int, default=50)
     ap.add_argument("--fdp-grad", action="store_true",
                     help="fixed-point (order-invariant) grad accumulation")
+    ap.add_argument("--precision-plan", default=None,
+                    help="train under a repro.numerics PrecisionPlan JSON")
     ap.add_argument("--log", default=None)
     args = ap.parse_args(argv)
 
@@ -65,8 +68,11 @@ def main(argv=None):
 
     trainer = Trainer(cfg, opt, data, step_fn, args.ckpt,
                       save_every=args.save_every)
+    ctx = (use_policy(policy_from_plan(args.precision_plan))
+           if args.precision_plan else contextlib.nullcontext())
     t0 = time.time()
-    trainer.run(args.steps)
+    with ctx:
+        trainer.run(args.steps)
     dt = time.time() - t0
     losses = [m["loss"] for m in trainer.metrics_log]
     print(f"[train] {args.arch}{' (reduced)' if args.reduced else ''}: "

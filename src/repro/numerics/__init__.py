@@ -1,0 +1,28 @@
+# repro.numerics — automated per-site numerical tailoring.
+#
+# The software analogue of the paper's Fig. 3 design-space sweep, run
+# automatically per model:
+#   trace      - calibration mode: dispatch.gemm records per-site operand
+#                statistics (shapes, exponent ranges, condition proxies,
+#                call counts) into a SiteProfile registry
+#   candidates - per-site (format x AccumulatorSpec x backend) grid drawn
+#                from core.formats / core.accumulator, pruned by the
+#                exponent ranges observed in the trace
+#   search     - Pareto frontier over (accuracy vs a bit-exact FDP oracle,
+#                modeled energy, optional measured latency) + greedy per-site
+#                assignment meeting an end-to-end error budget
+#   plan       - serializable PrecisionPlan (JSON, versioned) that loads into
+#                a NumericsPolicy with per-site overrides (--precision-plan)
+from .trace import CalibrationTrace, SiteProfile, calibrate
+from .candidates import Candidate, enumerate_candidates
+from .search import (Evaluated, SearchResult, evaluate_candidates,
+                     pareto_frontier, search)
+from .plan import (PLAN_VERSION, PrecisionPlan, SitePlan, load_plan)
+
+__all__ = [
+    "CalibrationTrace", "SiteProfile", "calibrate",
+    "Candidate", "enumerate_candidates",
+    "Evaluated", "SearchResult", "evaluate_candidates", "pareto_frontier",
+    "search",
+    "PLAN_VERSION", "PrecisionPlan", "SitePlan", "load_plan",
+]

@@ -1,0 +1,105 @@
+"""Per-site candidate enumeration: the (format x AccumulatorSpec x backend)
+grid, pruned by the exponent ranges observed in the calibration trace.
+
+The pruning is what makes the search tractable and honest at once: the msb is
+*derived* from the site's observed product bound plus K-term sum growth (an
+accumulator that can wrap on calibration data is never a candidate), and the
+lsb never extends below the point where the accumulation is already bit-exact
+for the observed operand range (deeper lsb costs energy and buys nothing).
+Each candidate carries the generator's datapath report, so the Pareto axes
+(modeled watts, pJ/MAC) come from the same model as the generated kernels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.core.accumulator import AccumulatorSpec
+from repro.core.dispatch import GemmConfig
+from repro.core.formats import BF16, FP32, PositFormat
+from repro.core.generator import DatapathReport, datapath_report
+
+from .trace import SiteProfile
+
+# Default tailoring grid: accumulator widths swept per site (the paper's
+# Fig. 3 x-axis, minus the points the trace prunes), and the input formats
+# considered. Native (MXU fp32-accumulate) candidates ride along per format.
+DEFAULT_WIDTHS = (24, 40, 64)
+DEFAULT_FORMATS = (BF16, FP32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One point of the per-site tailoring space."""
+
+    cfg: GemmConfig
+    report: DatapathReport
+
+    @property
+    def tag(self) -> str:
+        return self.cfg.tag()
+
+    @property
+    def watts(self) -> float:
+        return self.report.watts_fpga_model
+
+    def describe(self) -> str:
+        return f"{self.tag} ({self.watts:.3f} W model)"
+
+
+def _mk(cfg: GemmConfig) -> Candidate:
+    return Candidate(cfg, datapath_report(cfg.acc, cfg.fmt, cfg.mode))
+
+
+def enumerate_candidates(
+        profile: SiteProfile, *,
+        formats: Sequence = DEFAULT_FORMATS,
+        widths: Sequence[int] = DEFAULT_WIDTHS,
+        fdp_mode: str = "simulate",
+        include_native: bool = True,
+        include_paper91: bool = True,
+        ovf: Optional[int] = None) -> list[Candidate]:
+    """The pruned candidate grid for one traced site.
+
+    * msb is pinned at ``profile.msb_required`` (no overflow on observed data),
+    * each requested total width W places lsb at ``msb + ovf + 1 - W``,
+      clamped at the site's bit-exact depth (``lsb_exact``) — widths that
+      would only add always-zero low bits collapse onto the exact point,
+    * native (fp32-accumulate MXU) candidates are included per FloatFormat,
+    * the paper's uniform ⟨30,30,-30⟩ is kept as the reference point.
+    """
+    ovf = profile.sum_growth_bits + 1 if ovf is None else ovf
+    msb = profile.msb_required
+    out: list[Candidate] = []
+    seen: set = set()
+
+    def push(cfg: GemmConfig):
+        key = (cfg.fmt.name, cfg.acc, cfg.mode)
+        if key not in seen:
+            seen.add(key)
+            out.append(_mk(cfg))
+
+    for fmt in formats:
+        if isinstance(fmt, PositFormat):
+            # calibration samples are captured as decoded *floats*; replaying
+            # them through a posit config would misread them as int32 bit
+            # patterns. Posit tailoring needs an encode step in the eval path
+            # (ROADMAP) — refuse loudly rather than score garbage.
+            raise ValueError(
+                f"posit format {fmt.name!r} is not searchable yet: "
+                "candidate evaluation replays float samples")
+        if include_native:
+            push(GemmConfig(fmt, None, "native"))
+        lsb_floor = profile.lsb_exact(fmt.precision)
+        for w in sorted(widths):
+            lsb = msb + ovf + 1 - w
+            lsb = max(lsb, lsb_floor)          # prune: deeper is free of info
+            if lsb > msb:
+                continue                       # width too small for this msb
+            push(GemmConfig(fmt, AccumulatorSpec(ovf=ovf, msb=msb, lsb=lsb),
+                            fdp_mode))
+
+    if include_paper91:
+        push(GemmConfig(FP32, AccumulatorSpec.paper_91bit(), fdp_mode))
+    return out

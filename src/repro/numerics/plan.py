@@ -1,0 +1,146 @@
+"""PrecisionPlan: the deployable output of the tailoring search.
+
+A plan is a versioned JSON document mapping GEMM call-sites to the
+⟨format, accumulator, backend⟩ each one earned in the search, plus the
+modeled-energy/accuracy bookkeeping that justified the choice. Loading a plan
+yields a ``NumericsPolicy`` with per-site overrides, consumed by the launch
+drivers via ``--precision-plan`` — the same artifact moves from the search
+notebook to serving without translation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+from repro.core.accumulator import AccumulatorSpec
+from repro.core.dispatch import GemmConfig, NumericsPolicy
+from repro.core.formats import get_format
+
+PLAN_VERSION = 1
+
+
+def _cfg_to_json(cfg: GemmConfig) -> dict:
+    acc = None
+    if cfg.acc is not None:
+        acc = {"ovf": cfg.acc.ovf, "msb": cfg.acc.msb, "lsb": cfg.acc.lsb,
+               "round_mode": cfg.acc.round_mode,
+               "overflow_mode": cfg.acc.overflow_mode}
+    return {"fmt": cfg.fmt.name, "acc": acc, "mode": cfg.mode}
+
+
+def _cfg_from_json(d: dict) -> GemmConfig:
+    acc = None
+    if d.get("acc") is not None:
+        a = d["acc"]
+        acc = AccumulatorSpec(ovf=int(a["ovf"]), msb=int(a["msb"]),
+                              lsb=int(a["lsb"]),
+                              round_mode=a.get("round_mode", "trunc"),
+                              overflow_mode=a.get("overflow_mode", "wrap"))
+    return GemmConfig(get_format(d["fmt"]), acc, d.get("mode", "native"))
+
+
+@dataclasses.dataclass(frozen=True)
+class SitePlan:
+    """One call-site's assignment plus its search-time evidence."""
+
+    site: str
+    cfg: GemmConfig
+    error_bits: Optional[float] = None     # vs the site's bit-exact oracle
+    energy_j: Optional[float] = None       # modeled, at traced MAC count
+    macs: int = 0
+    latency_us: Optional[float] = None
+
+    def to_json(self) -> dict:
+        d = {"site": self.site, "cfg": _cfg_to_json(self.cfg),
+             "macs": self.macs}
+        for k in ("error_bits", "energy_j", "latency_us"):
+            v = getattr(self, k)
+            if v is not None:
+                d[k] = v
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "SitePlan":
+        return cls(site=d["site"], cfg=_cfg_from_json(d["cfg"]),
+                   error_bits=d.get("error_bits"),
+                   energy_j=d.get("energy_j"), macs=int(d.get("macs", 0)),
+                   latency_us=d.get("latency_us"))
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPlan:
+    """Versioned, serializable per-site numerics assignment."""
+
+    name: str
+    sites: tuple = ()                      # tuple[SitePlan]
+    default: GemmConfig = GemmConfig()     # unlisted sites (native bf16)
+    budget_bits: Optional[float] = None
+    version: int = PLAN_VERSION
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def site(self, name: str) -> Optional[SitePlan]:
+        for s in self.sites:
+            if s.site == name:
+                return s
+        return None
+
+    def to_policy(self) -> NumericsPolicy:
+        """The NumericsPolicy this plan deploys (exact-match per-site
+        overrides over the plan default)."""
+        return NumericsPolicy(
+            default=self.default,
+            overrides=tuple((s.site, s.cfg) for s in self.sites),
+            name=f"plan:{self.name}")
+
+    # -- serialization -----------------------------------------------------
+    def to_json(self) -> dict:
+        return {
+            "version": self.version,
+            "kind": "repro.numerics.PrecisionPlan",
+            "name": self.name,
+            "budget_bits": self.budget_bits,
+            "default": _cfg_to_json(self.default),
+            "sites": [s.to_json() for s in self.sites],
+            "meta": self.meta,
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "PrecisionPlan":
+        version = int(d.get("version", 0))
+        if version > PLAN_VERSION:
+            raise ValueError(
+                f"precision plan version {version} is newer than this "
+                f"library's {PLAN_VERSION}; refusing to guess its semantics")
+        if "sites" not in d or "name" not in d:
+            raise ValueError("not a PrecisionPlan document "
+                             "(missing 'name'/'sites')")
+        return cls(
+            name=d["name"],
+            sites=tuple(SitePlan.from_json(s) for s in d["sites"]),
+            default=_cfg_from_json(d["default"]) if "default" in d
+            else GemmConfig(),
+            budget_bits=d.get("budget_bits"),
+            version=version or PLAN_VERSION,
+            meta=dict(d.get("meta", {})),
+        )
+
+    def save(self, path) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1, sort_keys=True)
+            f.write("\n")
+
+    def describe(self) -> str:
+        lines = [f"PrecisionPlan {self.name!r} v{self.version} "
+                 f"(budget {self.budget_bits} bits, "
+                 f"default {self.default.tag()})"]
+        for s in self.sites:
+            bits = f"{s.error_bits:5.1f}b" if s.error_bits is not None else ""
+            lines.append(f"  {s.site:14s} {s.cfg.tag():40s} {bits}")
+        return "\n".join(lines)
+
+
+def load_plan(path) -> PrecisionPlan:
+    with open(path) as f:
+        return PrecisionPlan.from_json(json.load(f))

@@ -1,0 +1,275 @@
+"""Pareto search over the per-site tailoring space + greedy budget assignment.
+
+Per site, every candidate from ``enumerate_candidates`` is *replayed* on the
+operand sample captured during calibration and scored on three axes:
+
+  * ``error_bits`` — median correct bits vs a bit-exact FDP oracle (the
+    site's trace-sized ``exact_spec`` accumulator run through the simulate
+    backend: exact accumulation of the f32 sample, one rounding at read-out),
+  * ``energy_j`` — the calibrated VU3P power model at the candidate's
+    datapath, times the site's traced MAC count (modeled, as everywhere),
+  * ``latency_us`` — optional, measured through the GemmPlan autotune hooks
+    when ``measure_latency=True``.
+
+The assignment is the classic greedy: per site, the cheapest Pareto-optimal
+candidate whose error meets the (margin-adjusted) budget; then, if an
+end-to-end validator is supplied and the assembled policy misses the budget,
+the weakest site is upgraded along its frontier until validation passes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core import dispatch, energy
+from repro.core.accumulator import AccumulatorSpec
+from repro.core.dispatch import GemmConfig, NumericsPolicy
+from repro.core.formats import FP32
+from repro.core.metrics import correct_bits
+
+from .candidates import (DEFAULT_FORMATS, DEFAULT_WIDTHS, Candidate,
+                         enumerate_candidates)
+from .plan import PrecisionPlan, SitePlan
+from .trace import CalibrationTrace, SiteProfile
+
+ERROR_CAP_BITS = 24.0          # f32 read-out: "exact" caps at full mantissa
+
+
+@dataclasses.dataclass(frozen=True)
+class Evaluated:
+    """A candidate with its measured position in the objective space."""
+
+    candidate: Candidate
+    error_bits: float
+    energy_j: float
+    latency_us: Optional[float] = None
+
+    @property
+    def cfg(self) -> GemmConfig:
+        return self.candidate.cfg
+
+    def describe(self) -> str:
+        lat = f" {self.latency_us:.0f}us" if self.latency_us else ""
+        return (f"{self.candidate.tag:40s} {self.error_bits:5.1f} bits  "
+                f"{self.energy_j:.3e} J{lat}")
+
+
+def _apply_cfg(cfg: GemmConfig, a, b, site: str = "eval"):
+    """Run one GEMM through the real dispatch path under a single-config
+    policy — candidate evaluation and plan deployment share every code path,
+    so a reloaded plan reproduces the evaluated outputs bit for bit."""
+    return dispatch.gemm(a, b, site=site, policy=NumericsPolicy(cfg))
+
+
+def oracle_output(profile: SiteProfile, a, b):
+    """The site's bit-exact FDP oracle on the sample: trace-sized exact
+    accumulator through the simulate backend."""
+    cfg = GemmConfig(FP32, profile.exact_spec(FP32.precision), "simulate")
+    return np.asarray(_apply_cfg(cfg, a, b, site=profile.site))
+
+
+def _measure_latency_us(cfg: GemmConfig, profile: SiteProfile) -> float:
+    """Best-of-2 wall time of the dispatched call at the site's *dominant
+    traced shape* (synthetic operands — the tiny calibration sample would
+    only measure dispatch overhead). Pallas candidates resolve their block
+    plan through the GemmPlan autotuner first."""
+    import jax
+    import jax.numpy as jnp
+
+    (_, m, n, k), _count = max(profile.shapes.items(),
+                               key=lambda kv: kv[1])
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    if cfg.mode == "pallas":
+        dispatch.plan_gemm(m, n, k, fmt=cfg.fmt, spec=cfg.acc, autotune=True)
+    fn = lambda: _apply_cfg(cfg, a, b, profile.site)
+    jax.block_until_ready(fn())                       # compile + warm
+    best = float("inf")
+    for _ in range(2):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def evaluate_candidates(profile: SiteProfile,
+                        candidates: Sequence[Candidate], *,
+                        measure_latency: bool = False) -> list[Evaluated]:
+    """Replay each candidate on the site's captured sample and score it."""
+    if profile.sample is None:
+        raise ValueError(f"site {profile.site!r} has no captured sample "
+                         "(was it traced under calibrate()?)")
+    import jax.numpy as jnp
+
+    a = jnp.asarray(profile.sample_a)
+    b = jnp.asarray(profile.sample_b)
+    ref = oracle_output(profile, a, b)
+    out = []
+    for c in candidates:
+        got = np.asarray(_apply_cfg(c.cfg, a, b, site=profile.site))
+        bits = float(np.median(correct_bits(got, ref, cap=ERROR_CAP_BITS)))
+        e = energy.gemm_power(c.cfg.fmt, c.cfg.acc).energy_joules(profile.macs)
+        lat = (_measure_latency_us(c.cfg, profile)
+               if measure_latency else None)
+        out.append(Evaluated(c, bits, e, lat))
+    return out
+
+
+def pareto_frontier(points: Sequence[Evaluated]) -> list[Evaluated]:
+    """Non-dominated subset: maximize error_bits, minimize energy (and
+    latency when measured), sorted by ascending energy."""
+
+    def dominates(x: Evaluated, y: Evaluated) -> bool:
+        ge = (x.error_bits >= y.error_bits and x.energy_j <= y.energy_j)
+        gt = (x.error_bits > y.error_bits or x.energy_j < y.energy_j)
+        if x.latency_us is not None and y.latency_us is not None:
+            ge = ge and x.latency_us <= y.latency_us
+            gt = gt or x.latency_us < y.latency_us
+        return ge and gt
+
+    front = [p for p in points
+             if not any(dominates(q, p) for q in points if q is not p)]
+    return sorted(front, key=lambda p: (p.energy_j, -p.error_bits))
+
+
+@dataclasses.dataclass
+class SiteDecision:
+    site: str
+    profile: SiteProfile
+    frontier: list[Evaluated]          # ascending energy
+    chosen: int                        # index into frontier
+
+    @property
+    def pick(self) -> Evaluated:
+        return self.frontier[self.chosen]
+
+    def _next_better(self):
+        """Index of the cheapest later frontier point with strictly more
+        correct bits. With a latency axis the frontier is not monotone in
+        error along the energy sort, so an upgrade must be accuracy-guarded
+        or it could walk to a worse point."""
+        for i in range(self.chosen + 1, len(self.frontier)):
+            if self.frontier[i].error_bits > self.pick.error_bits:
+                return i
+        return None
+
+    def can_upgrade(self) -> bool:
+        return self._next_better() is not None
+
+    def upgrade(self) -> None:
+        nxt = self._next_better()
+        assert nxt is not None
+        self.chosen = nxt
+
+
+@dataclasses.dataclass
+class SearchResult:
+    plan: PrecisionPlan
+    decisions: dict[str, SiteDecision]
+    validated_bits: Optional[float]
+
+    def describe(self) -> str:
+        lines = [f"precision plan {self.plan.name!r} "
+                 f"(budget {self.plan.budget_bits} bits)"]
+        for site, d in sorted(self.decisions.items()):
+            p = d.pick
+            lines.append(f"  {site:14s} -> {p.candidate.tag:40s} "
+                         f"{p.error_bits:5.1f} bits  {p.energy_j:.3e} J")
+        m = self.plan.meta
+        lines.append(f"  modeled energy {m['modeled_energy_j']:.3e} J vs "
+                     f"uniform 91-bit {m['baseline_energy_j']:.3e} J "
+                     f"({m['energy_vs_baseline']:.1%})")
+        if self.validated_bits is not None:
+            lines.append(f"  end-to-end validated: {self.validated_bits:.1f} "
+                         "correct bits vs oracle")
+        return "\n".join(lines)
+
+
+def search(trace: CalibrationTrace, budget_bits: float, *,
+           name: str = "tailored",
+           default: Optional[GemmConfig] = None,
+           formats: Sequence = DEFAULT_FORMATS,
+           widths: Sequence[int] = DEFAULT_WIDTHS,
+           fdp_mode: str = "simulate",
+           include_native: bool = True,
+           include_paper91: bool = True,
+           margin_bits: float = 2.0,
+           measure_latency: bool = False,
+           validate: Optional[Callable[[NumericsPolicy], float]] = None,
+           max_upgrades: int = 16) -> SearchResult:
+    """Greedy per-site assignment meeting ``budget_bits`` end-to-end correct
+    bits at minimum modeled energy.
+
+    ``validate``, when given, maps an assembled NumericsPolicy to measured
+    end-to-end correct bits (e.g. a model forward vs the uniform-FDP oracle);
+    while it reports less than the budget, the currently-weakest site is
+    upgraded along its Pareto frontier (``max_upgrades`` cap).
+    """
+    profiles = {s: p for s, p in trace.profiles().items()
+                if p.sample is not None}
+    if not profiles:
+        raise ValueError("trace has no calibrated sites with samples")
+
+    decisions: dict[str, SiteDecision] = {}
+    site_target = budget_bits + margin_bits
+    for site, prof in sorted(profiles.items()):
+        cands = enumerate_candidates(prof, formats=formats, widths=widths,
+                                     fdp_mode=fdp_mode,
+                                     include_native=include_native,
+                                     include_paper91=include_paper91)
+        evaluated = evaluate_candidates(prof, cands,
+                                        measure_latency=measure_latency)
+        frontier = pareto_frontier(evaluated)
+        chosen = next((i for i, p in enumerate(frontier)
+                       if p.error_bits >= site_target), len(frontier) - 1)
+        decisions[site] = SiteDecision(site, prof, frontier, chosen)
+
+    def assemble() -> PrecisionPlan:
+        return _plan_from_decisions(name, decisions, budget_bits, default)
+
+    validated = None
+    if validate is not None:
+        for _ in range(max_upgrades + 1):
+            validated = float(validate(assemble().to_policy()))
+            if validated >= budget_bits:
+                break
+            upgradable = [d for d in decisions.values() if d.can_upgrade()]
+            if not upgradable:
+                break
+            weakest = min(upgradable, key=lambda d: d.pick.error_bits)
+            weakest.upgrade()
+
+    plan = assemble()
+    if validated is not None:
+        plan.meta["validated_bits"] = validated
+    return SearchResult(plan, decisions, validated)
+
+
+def _plan_from_decisions(name, decisions, budget_bits,
+                         default: Optional[GemmConfig]) -> PrecisionPlan:
+    sites = []
+    modeled = baseline = 0.0
+    total_macs = 0
+    base_power = energy.gemm_power(FP32, AccumulatorSpec.paper_91bit())
+    for site, d in sorted(decisions.items()):
+        p = d.pick
+        sites.append(SitePlan(site=site, cfg=p.cfg,
+                              error_bits=p.error_bits, energy_j=p.energy_j,
+                              macs=d.profile.macs, latency_us=p.latency_us))
+        modeled += p.energy_j
+        baseline += base_power.energy_joules(d.profile.macs)
+        total_macs += d.profile.macs
+    meta = {
+        "modeled_energy_j": modeled,
+        "baseline_energy_j": baseline,
+        "energy_vs_baseline": modeled / baseline if baseline else None,
+        "total_macs": total_macs,
+    }
+    return PrecisionPlan(name=name, sites=tuple(sites),
+                         default=default or GemmConfig(),
+                         budget_bits=budget_bits, meta=meta)

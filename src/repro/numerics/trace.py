@@ -1,0 +1,295 @@
+"""Calibration tracing: record what every GEMM call-site actually computes.
+
+``calibrate()`` installs a hook into ``repro.core.dispatch`` so that every
+dispatched GEMM — including ones inside ``jax.jit`` / ``jax.lax.scan`` bodies
+— reports per-call operand statistics through ``jax.debug.callback`` into a
+host-side ``CalibrationTrace``. Each call-site accumulates a ``SiteProfile``:
+
+  * shapes and call counts (a scanned layer stack counts once per layer),
+  * exponent ranges of both operands (floor(log2 |x|) of the extreme
+    magnitudes), which drive candidate pruning and the exact-oracle sizing,
+  * a condition proxy (``cancellation_bits``: how far the output magnitude
+    sits below the no-cancellation upper bound — large values mean the site
+    needs accumulator headroom below the msb),
+  * total MAC count (the energy model's cycle denominator),
+  * one captured operand sample per site, on which the search evaluates
+    candidate numerics against a bit-exact FDP oracle.
+
+Calibration runs *forward* passes. Re-executed computations (``jax.remat``
+backward recompute, repeated jit calls) fire the callbacks again and inflate
+call counts accordingly; trace un-rematted forwards for clean statistics.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+import threading
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dispatch
+from repro.core.accumulator import AccumulatorSpec
+from repro.core.formats import PositFormat
+
+
+def _floor_log2(v: float) -> Optional[int]:
+    """floor(log2(v)) for a positive finite float, else None."""
+    if not (v > 0.0) or not math.isfinite(v):
+        return None
+    return math.frexp(v)[1] - 1
+
+
+@dataclasses.dataclass
+class SiteProfile:
+    """Aggregated calibration statistics for one GEMM call-site."""
+
+    site: str
+    calls: int = 0
+    macs: int = 0
+    max_k: int = 0
+    shapes: dict = dataclasses.field(default_factory=dict)
+    cfg_tags: set = dataclasses.field(default_factory=set)
+    # operand/output magnitude extremes (absolute values, f32 domain)
+    a_abs_max: float = 0.0
+    a_abs_min_nz: float = math.inf
+    b_abs_max: float = 0.0
+    b_abs_min_nz: float = math.inf
+    out_abs_max: float = 0.0
+    out_abs_min_nz: float = math.inf
+    # first captured operand sample (rows x K, K x cols) for candidate eval
+    sample_a: Optional[np.ndarray] = None
+    sample_b: Optional[np.ndarray] = None
+
+    # -- exponent ranges ---------------------------------------------------
+    @property
+    def a_exp_max(self):
+        return _floor_log2(self.a_abs_max)
+
+    @property
+    def a_exp_min(self):
+        return _floor_log2(self.a_abs_min_nz)
+
+    @property
+    def b_exp_max(self):
+        return _floor_log2(self.b_abs_max)
+
+    @property
+    def b_exp_min(self):
+        return _floor_log2(self.b_abs_min_nz)
+
+    @property
+    def prod_exp_max(self) -> int:
+        """Upper bound on floor(log2 |a_i * b_j|) over observed operands."""
+        ea, eb = self.a_exp_max, self.b_exp_max
+        if ea is None or eb is None:
+            return 0
+        return ea + eb + 1                      # |a||b| < 2^(ea+1) * 2^(eb+1)
+
+    @property
+    def sum_growth_bits(self) -> int:
+        """ceil(log2 K): how many extra magnitude bits a K-term sum can add."""
+        return max(1, math.ceil(math.log2(max(self.max_k, 2))))
+
+    @property
+    def msb_required(self) -> int:
+        """Smallest accumulator msb that cannot overflow on the observed
+        operand range (product bound + K-term sum growth)."""
+        return self.prod_exp_max + self.sum_growth_bits + 1
+
+    @property
+    def cancellation_bits(self) -> float:
+        """Condition proxy: log2(no-cancellation output bound / observed
+        |out|). ~0 for benign sums; large when the site cancels heavily and
+        therefore needs lsb depth to keep correct bits."""
+        if self.out_abs_max <= 0.0:
+            return 0.0
+        bound = self.a_abs_max * self.b_abs_max * max(self.max_k, 1)
+        if bound <= 0.0:
+            return 0.0
+        return max(0.0, math.log2(bound / self.out_abs_max))
+
+    def lsb_exact(self, precision: int = 24) -> int:
+        """lsb at (below) which every observed product is captured exactly:
+        the smallest product magnitude minus its 2p fraction bits."""
+        ea = self.a_exp_min if self.a_exp_min is not None else -126
+        eb = self.b_exp_min if self.b_exp_min is not None else -126
+        return ea + eb - 2 * precision
+
+    def exact_spec(self, precision: int = 24) -> AccumulatorSpec:
+        """A ⟨ovf,msb,lsb⟩ accumulator that is bit-exact and overflow-free on
+        this site's observed operand range — the per-site FDP oracle, sized
+        by the trace rather than the format's worst case."""
+        return AccumulatorSpec(ovf=self.sum_growth_bits + 2,
+                               msb=self.prod_exp_max + 1,
+                               lsb=self.lsb_exact(precision) - 2)
+
+    @property
+    def sample(self):
+        if self.sample_a is None or self.sample_b is None:
+            return None
+        return self.sample_a, self.sample_b
+
+    def to_dict(self) -> dict:
+        """JSON-able summary (samples excluded)."""
+        return {
+            "site": self.site, "calls": self.calls, "macs": self.macs,
+            "max_k": self.max_k,
+            "shapes": {"x".join(map(str, k)): v
+                       for k, v in sorted(self.shapes.items())},
+            "cfg_tags": sorted(self.cfg_tags),
+            "a_exp": [self.a_exp_min, self.a_exp_max],
+            "b_exp": [self.b_exp_min, self.b_exp_max],
+            "cancellation_bits": round(self.cancellation_bits, 2),
+            "msb_required": self.msb_required,
+        }
+
+    def describe(self) -> str:
+        return (f"{self.site:14s} calls={self.calls:<5d} "
+                f"macs={self.macs:.2e} K<={self.max_k} "
+                f"a_exp=[{self.a_exp_min},{self.a_exp_max}] "
+                f"b_exp=[{self.b_exp_min},{self.b_exp_max}] "
+                f"cancel={self.cancellation_bits:.1f}b "
+                f"msb_req={self.msb_required}")
+
+
+class CalibrationTrace:
+    """Thread-safe registry of ``SiteProfile``s filled by the dispatch hook."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._profiles: dict[str, SiteProfile] = {}
+
+    # -- recording (called from jax.debug.callback on host) ---------------
+    def _record(self, site, batch, m, n, k, tag, keep_sample,
+                a_max, a_min, b_max, b_min, o_max, o_min,
+                sample_a, sample_b):
+        with self._lock:
+            p = self._profiles.setdefault(site, SiteProfile(site))
+            p.calls += 1
+            p.macs += batch * m * n * k
+            p.max_k = max(p.max_k, k)
+            key = (batch, m, n, k)
+            p.shapes[key] = p.shapes.get(key, 0) + 1
+            p.cfg_tags.add(tag)
+            p.a_abs_max = max(p.a_abs_max, float(a_max))
+            p.b_abs_max = max(p.b_abs_max, float(b_max))
+            p.out_abs_max = max(p.out_abs_max, float(o_max))
+            for attr, v in (("a_abs_min_nz", a_min), ("b_abs_min_nz", b_min),
+                            ("out_abs_min_nz", o_min)):
+                v = float(v)
+                if math.isfinite(v):
+                    setattr(p, attr, min(getattr(p, attr), v))
+            if keep_sample and p.sample_a is None:
+                p.sample_a = np.asarray(sample_a, np.float32).copy()
+                p.sample_b = np.asarray(sample_b, np.float32).copy()
+
+    # -- queries -----------------------------------------------------------
+    def sites(self) -> list[str]:
+        with self._lock:
+            return sorted(self._profiles)
+
+    def has_sample(self, site: str) -> bool:
+        with self._lock:
+            p = self._profiles.get(site)
+            return p is not None and p.sample_a is not None
+
+    def profile(self, site: str) -> SiteProfile:
+        with self._lock:
+            return self._profiles[site]
+
+    def profiles(self) -> dict[str, SiteProfile]:
+        with self._lock:
+            return dict(self._profiles)
+
+    def total_macs(self) -> int:
+        with self._lock:
+            return sum(p.macs for p in self._profiles.values())
+
+    def summary(self) -> str:
+        return "\n".join(p.describe()
+                         for _, p in sorted(self.profiles().items()))
+
+    def to_dict(self) -> dict:
+        return {s: p.to_dict() for s, p in self.profiles().items()}
+
+
+def _as_float(fmt, x):
+    """Stats domain: posit carriers decode to their float values."""
+    if isinstance(fmt, PositFormat):
+        return fmt.to_float(x)
+    return x.astype(jnp.float32)
+
+
+def _make_hook(trace: CalibrationTrace, sample_rows: int, sample_cols: int):
+    staged_sample: set = set()              # sites whose sample is in flight
+
+    def hook(site, cfg, a, b, out):
+        if a.ndim < 2 or b.ndim < 2:       # 1-D promotions: skip (not model
+            return                          # call-sites; stats would be moot)
+        m, k = a.shape[-2], a.shape[-1]
+        n = b.shape[-1]
+        batch_dims = jnp.broadcast_shapes(a.shape[:-2], b.shape[:-2])
+        batch = math.prod(batch_dims) if batch_dims else 1
+
+        af = _as_float(cfg.fmt, a)
+        bf = _as_float(cfg.fmt, b)
+        of = out.astype(jnp.float32)
+
+        def absmax(x):
+            return jnp.max(jnp.abs(x))
+
+        def absmin_nz(x):
+            ax = jnp.abs(x)
+            return jnp.min(jnp.where(ax > 0, ax, jnp.inf))
+
+        # one operand sample per site: flattened rows of a, first batch
+        # element's (K, cols) block of b — enough for the search to replay
+        # the site's real data distribution through candidate numerics.
+        # Ship it only until a sample lands (a scanned site still transfers
+        # once per iteration of its *first* staged computation, since the
+        # gate is evaluated at trace time; later retraces skip it).
+        keep = site not in staged_sample and not trace.has_sample(site)
+        if keep:
+            staged_sample.add(site)
+            rows = min(sample_rows, int(np.prod(af.shape[:-1])))
+            cols = min(sample_cols, n)
+            sa = af.reshape(-1, k)[:rows]
+            sb = bf.reshape(-1, k, n)[0][:, :cols]
+        else:
+            sa = sb = jnp.zeros((), jnp.float32)    # placeholder, discarded
+
+        jax.debug.callback(
+            partial(trace._record, site, batch, m, n, k, cfg.tag(), keep),
+            absmax(af), absmin_nz(af), absmax(bf), absmin_nz(bf),
+            absmax(of), absmin_nz(of), sa, sb)
+
+    return hook
+
+
+@contextlib.contextmanager
+def calibrate(trace: Optional[CalibrationTrace] = None, *,
+              sample_rows: int = 16, sample_cols: int = 16):
+    """Calibration mode: while active, every dispatched GEMM records its
+    per-site statistics into the yielded ``CalibrationTrace``.
+
+    Works under jit/scan (stats flow out through ``jax.debug.callback``), but
+    note that a function *compiled while calibration is active* keeps its
+    callbacks for the lifetime of its jit cache entry — calibrate on fresh
+    functions, or call ``.clear_cache()`` on jitted entry points afterwards.
+    Not re-entrant across threads (the hook is process-global).
+    """
+    trace = trace if trace is not None else CalibrationTrace()
+    prev = dispatch.set_trace_hook(_make_hook(trace, sample_rows, sample_cols))
+    try:
+        yield trace
+    finally:
+        dispatch.set_trace_hook(prev)
+        # debug callbacks are asynchronous: make every in-flight record land
+        # before the caller reads the trace.
+        jax.effects_barrier()

@@ -30,6 +30,60 @@ def test_context_manager_restores():
     assert current_policy() is before
 
 
+def test_use_policy_restores_after_exception():
+    """A raising body must not leak its policy into subsequent code."""
+    before = current_policy()
+    with pytest.raises(RuntimeError):
+        with use_policy(MXU_FP32):
+            assert current_policy() is MXU_FP32
+            raise RuntimeError("boom")
+    assert current_policy() is before
+    # nested: inner exception unwinds one level only
+    with use_policy(MXU_FP32):
+        with pytest.raises(ValueError):
+            with use_policy(MXU_BF16):
+                raise ValueError("inner")
+        assert current_policy() is MXU_FP32
+    assert current_policy() is before
+
+
+def test_use_policy_rejects_non_policy():
+    with pytest.raises(TypeError):
+        with use_policy("mxu_bf16"):
+            pass
+
+
+def test_use_policy_thread_isolation():
+    """A policy installed in one thread is invisible to others, and a thread
+    that raises under a policy leaves no residue behind."""
+    import threading
+
+    from repro.core.dispatch import _state
+
+    results = {}
+
+    def worker():
+        results["before"] = current_policy()
+        try:
+            with use_policy(MXU_FP32):
+                results["inside"] = current_policy()
+                raise RuntimeError("boom")
+        except RuntimeError:
+            pass
+        results["after"] = current_policy()
+        results["residue"] = hasattr(_state, "policy")
+
+    with use_policy(MXU_BF16):
+        t = threading.Thread(target=worker)
+        t.start()
+        t.join()
+        assert current_policy() is MXU_BF16       # worker didn't touch us
+    assert results["before"] is current_policy()  # fresh thread = default
+    assert results["inside"] is MXU_FP32
+    assert results["after"] is results["before"]
+    assert not results["residue"]                 # thread state fully unwound
+
+
 def test_native_vs_simulate_agreement(rng):
     """91-bit simulate mode == f64 reference; native f32 close."""
     a = jnp.asarray(rng.standard_normal((8, 64)), jnp.float32)

@@ -1,0 +1,60 @@
+"""core.energy: the fitted VU3P power model must reproduce the paper's three
+measured wattage anchors exactly and behave monotonically in datapath size
+(the properties the numerics search's energy axis depends on)."""
+
+import pytest
+
+from repro.core import AccumulatorSpec, BF16, FP16, FP32
+from repro.core.energy import (FREQ_HZ, PAPER_POINTS, fdp_power, fma_power,
+                               gemm_power, spec_power, tpu_fdp_pj_per_mac)
+
+
+def test_reproduces_paper_wattage_anchors():
+    """fp64 FMA 0.266 W, fp128 FMA 0.549 W, 91-bit FDP 0.491 W."""
+    assert fma_power(53).watts == pytest.approx(0.266, rel=1e-6)
+    assert fma_power(113).watts == pytest.approx(0.549, rel=1e-6)
+    assert fdp_power(53, 91).watts == pytest.approx(0.491, rel=1e-6)
+    for name, (model_w, paper_w) in PAPER_POINTS.items():
+        assert model_w == pytest.approx(paper_w, rel=1e-6), name
+
+
+def test_fdp_power_monotone_in_accumulator_width():
+    widths = [16, 24, 40, 64, 91, 128, 256, 512]
+    for p in (8, 11, 24, 53):
+        watts = [fdp_power(p, w).watts for w in widths]
+        assert watts == sorted(watts)
+        assert all(w2 > w1 for w1, w2 in zip(watts, watts[1:]))
+
+
+def test_spec_power_monotone_through_accumulator_specs():
+    specs = [AccumulatorSpec(4, 8, lsb) for lsb in (0, -16, -40, -80)]
+    watts = [spec_power(FP32, s).watts for s in specs]
+    assert all(w2 > w1 for w1, w2 in zip(watts, watts[1:]))
+
+
+def test_power_monotone_in_input_precision():
+    for mk in (lambda p: fma_power(p), lambda p: fdp_power(p, 91)):
+        watts = [mk(f.precision).watts for f in (BF16, FP16, FP32)]
+        assert watts == sorted(watts)
+        assert watts[0] < watts[-1]
+
+
+def test_gemm_power_selects_datapath_family():
+    spec = AccumulatorSpec.paper_91bit()
+    assert gemm_power(FP32, None).watts == fma_power(FP32.precision).watts
+    assert gemm_power(FP32, spec).watts == fdp_power(FP32.precision,
+                                                     spec.width).watts
+
+
+def test_energy_scales_linearly_with_macs():
+    rep = fdp_power(24, 64)
+    one = rep.energy_joules(1)
+    assert one == pytest.approx(rep.watts / FREQ_HZ)
+    assert rep.energy_joules(1000) == pytest.approx(1000 * one)
+    assert rep.energy_joules(1000, macs_per_cycle=4) == \
+        pytest.approx(250 * one)
+
+
+def test_tpu_model_monotone_in_limbs():
+    pjs = [tpu_fdp_pj_per_mac(24, n) for n in (1, 2, 4, 8)]
+    assert all(b > a for a, b in zip(pjs, pjs[1:]))

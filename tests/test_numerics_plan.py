@@ -1,0 +1,92 @@
+"""PrecisionPlan serialization: JSON round-trip, versioning, and the
+checked-in paper-MLP fixture."""
+
+import json
+import os
+
+import pytest
+
+from repro.core import AccumulatorSpec, BF16, FP32
+from repro.core.dispatch import GemmConfig
+from repro.numerics import PLAN_VERSION, PrecisionPlan, SitePlan, load_plan
+
+FIXTURE = os.path.join(os.path.dirname(__file__), os.pardir,
+                       "examples", "plans", "paper_mlp.json")
+
+
+def _plan():
+    return PrecisionPlan(
+        name="unit",
+        sites=(
+            SitePlan("attn_qk",
+                     GemmConfig(FP32, AccumulatorSpec(5, 8, -40), "simulate"),
+                     error_bits=24.0, energy_j=1e-4, macs=1 << 20),
+            SitePlan("mlp_in", GemmConfig(BF16, None, "native"),
+                     error_bits=8.5, energy_j=2e-5, macs=1 << 21),
+        ),
+        default=GemmConfig(BF16, None, "native"),
+        budget_bits=8.0,
+        meta={"modeled_energy_j": 1.2e-4, "baseline_energy_j": 4e-4},
+    )
+
+
+def test_round_trip_preserves_everything():
+    p = _plan()
+    q = PrecisionPlan.from_json(json.loads(json.dumps(p.to_json())))
+    assert q.name == p.name and q.version == PLAN_VERSION
+    assert q.budget_bits == p.budget_bits
+    assert q.meta == p.meta
+    assert len(q.sites) == 2
+    for a, b in zip(p.sites, q.sites):
+        assert a.site == b.site
+        assert a.cfg == b.cfg                 # fmt, spec, mode all exact
+        assert a.error_bits == b.error_bits
+        assert a.macs == b.macs
+    assert q.default == p.default
+
+
+def test_to_policy_overrides():
+    pol = _plan().to_policy()
+    assert pol.lookup("attn_qk").mode == "simulate"
+    assert pol.lookup("attn_qk").acc == AccumulatorSpec(5, 8, -40)
+    assert pol.lookup("mlp_in").fmt is BF16
+    assert pol.lookup("unlisted_site") == GemmConfig(BF16, None, "native")
+    assert pol.name == "plan:unit"
+
+
+def test_save_load_file(tmp_path):
+    path = tmp_path / "plan.json"
+    p = _plan()
+    p.save(path)
+    q = load_plan(path)
+    assert q.sites == p.sites
+    assert q.to_policy().lookup("attn_qk") == p.sites[0].cfg
+
+
+def test_newer_version_rejected():
+    d = _plan().to_json()
+    d["version"] = PLAN_VERSION + 1
+    with pytest.raises(ValueError, match="newer"):
+        PrecisionPlan.from_json(d)
+
+
+def test_malformed_document_rejected():
+    with pytest.raises(ValueError, match="PrecisionPlan"):
+        PrecisionPlan.from_json({"version": 1, "something": "else"})
+
+
+def test_checked_in_fixture_loads_and_pays_for_itself():
+    """The committed paper-MLP plan: valid schema, covers the model's GEMM
+    sites, and its modeled energy undercuts the uniform 91-bit baseline."""
+    plan = load_plan(FIXTURE)
+    assert plan.version == PLAN_VERSION
+    assert plan.budget_bits is not None
+    sites = {s.site for s in plan.sites}
+    assert {"attn_qk", "attn_av", "mlp_in", "mlp_out", "lm_head"} <= sites
+    pol = plan.to_policy()
+    for s in plan.sites:
+        assert pol.lookup(s.site) == s.cfg
+        assert s.error_bits is None or s.error_bits >= plan.budget_bits
+    m = plan.meta
+    assert m["modeled_energy_j"] <= m["baseline_energy_j"]
+    assert m.get("validated_bits", plan.budget_bits) >= plan.budget_bits

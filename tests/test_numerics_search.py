@@ -1,0 +1,142 @@
+"""repro.numerics end-to-end: trace the paper-MLP forward pass, search under
+an error budget, emit a PrecisionPlan, reload it, and verify (a) per-site
+bit-for-bit reproduction of the chosen candidates and (b) modeled energy
+below the uniform ⟨91-bit⟩ baseline while meeting the budget."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import BF16, FP32
+from repro.core.dispatch import (FDP91, MXU_FP32, NumericsPolicy, gemm,
+                                 use_policy)
+from repro.core.metrics import correct_bits
+from repro.models import forward, init, LOCAL
+from repro.numerics import calibrate, load_plan, pareto_frontier, search
+from repro.numerics.search import evaluate_candidates
+from repro.numerics.candidates import enumerate_candidates
+
+BUDGET_BITS = 8.0
+
+
+@pytest.fixture(scope="module")
+def mlp_setup():
+    cfg = get_config("paper-mlp").reduced()
+    params = init(cfg, jax.random.key(0))
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (2, 8), 0,
+                                          cfg.vocab_size)}
+    return cfg, params, batch
+
+
+@pytest.fixture(scope="module")
+def searched(mlp_setup):
+    """Trace -> search (with end-to-end validation) once for the module."""
+    cfg, params, batch = mlp_setup
+    with calibrate() as trace, use_policy(MXU_FP32):
+        jax.block_until_ready(forward(params, cfg, batch, LOCAL,
+                                      remat="none"))
+
+    with use_policy(FDP91):
+        ref = np.asarray(forward(params, cfg, batch, LOCAL, remat="none"))
+
+    def validate(policy):
+        with use_policy(policy):
+            out = np.asarray(forward(params, cfg, batch, LOCAL,
+                                     remat="none"))
+        return float(np.median(correct_bits(out, ref, cap=24)))
+
+    res = search(trace, budget_bits=BUDGET_BITS, name="paper-mlp-test",
+                 formats=(BF16, FP32), widths=(32,), validate=validate)
+    return trace, res
+
+
+def test_trace_covers_model_sites(searched):
+    trace, _ = searched
+    sites = set(trace.sites())
+    assert {"attn_q", "attn_k", "attn_v", "attn_o", "attn_qk", "attn_av",
+            "mlp_in", "mlp_gate", "mlp_out", "lm_head"} <= sites
+    for p in trace.profiles().values():
+        assert p.sample is not None and p.calls >= 1
+
+
+def test_search_meets_budget_under_baseline_energy(searched):
+    _, res = searched
+    assert res.validated_bits is not None
+    assert res.validated_bits >= BUDGET_BITS
+    m = res.plan.meta
+    assert m["modeled_energy_j"] <= m["baseline_energy_j"]
+    assert m["total_macs"] > 0
+    # every site decision sits on its own Pareto frontier
+    for d in res.decisions.values():
+        assert d.pick in pareto_frontier(d.frontier)
+
+
+def test_plan_reload_reproduces_sites_bit_for_bit(searched, tmp_path):
+    """Serialize -> reload -> per-site outputs equal the chosen candidates'
+    outputs bit for bit (the plan deploys exactly what the search measured)."""
+    trace, res = searched
+    path = tmp_path / "plan.json"
+    res.plan.save(path)
+    plan = load_plan(path)
+    pol = plan.to_policy()
+    for site, d in res.decisions.items():
+        prof = d.profile
+        a = jnp.asarray(prof.sample_a)
+        b = jnp.asarray(prof.sample_b)
+        out_plan = np.asarray(gemm(a, b, site=site, policy=pol))
+        out_cand = np.asarray(
+            gemm(a, b, site=site, policy=NumericsPolicy(d.pick.cfg)))
+        np.testing.assert_array_equal(out_plan, out_cand, err_msg=site)
+
+
+def test_simulate_only_search_is_bit_exact_on_reload(searched, tmp_path):
+    """Restricting the grid to the FDP simulate backend: the deployed plan's
+    per-site outputs still reproduce the evaluated candidates bit for bit
+    (acceptance criterion (a), under the simulate backend specifically)."""
+    trace, _ = searched
+    res = search(trace, budget_bits=BUDGET_BITS, name="sim-only",
+                 formats=(FP32,), widths=(40,), include_native=False)
+    path = tmp_path / "sim_plan.json"
+    res.plan.save(path)
+    pol = load_plan(path).to_policy()
+    for site, d in res.decisions.items():
+        assert pol.lookup(site).mode == "simulate"
+        a = jnp.asarray(d.profile.sample_a)
+        b = jnp.asarray(d.profile.sample_b)
+        np.testing.assert_array_equal(
+            np.asarray(gemm(a, b, site=site, policy=pol)),
+            np.asarray(gemm(a, b, site=site,
+                            policy=NumericsPolicy(d.pick.cfg))),
+            err_msg=site)
+    assert res.plan.meta["modeled_energy_j"] <= \
+        res.plan.meta["baseline_energy_j"]
+
+
+def test_candidate_grid_is_pruned_by_trace(searched):
+    """Enumerated accumulators never overflow on observed data (msb pinned at
+    the traced requirement) and never extend below the bit-exact depth."""
+    trace, _ = searched
+    prof = trace.profile("mlp_in")
+    cands = enumerate_candidates(prof, widths=(16, 32, 64, 2048))
+    assert cands
+    for c in cands:
+        if c.cfg.acc is None or c.cfg.acc.msb == 30:   # native / paper91 ref
+            continue
+        assert c.cfg.acc.msb == prof.msb_required
+        assert c.cfg.acc.lsb >= prof.lsb_exact(c.cfg.fmt.precision)
+
+
+def test_evaluated_errors_are_ordered_sanely(searched):
+    """Wider accumulators never lose correct bits on the same site sample."""
+    trace, _ = searched
+    prof = trace.profile("attn_qk")
+    cands = enumerate_candidates(prof, formats=(FP32,), widths=(16, 32, 64),
+                                 include_native=False, include_paper91=False)
+    ev = evaluate_candidates(prof, cands)
+    by_width = sorted(ev, key=lambda e: e.cfg.acc.width)
+    bits = [e.error_bits for e in by_width]
+    assert all(b2 >= b1 - 0.5 for b1, b2 in zip(bits, bits[1:]))
+    energies = [e.energy_j for e in by_width]
+    assert energies == sorted(energies)
