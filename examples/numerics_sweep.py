@@ -5,9 +5,11 @@ emit a deployable PrecisionPlan — Fig. 3's design-space sweep as a subsystem
 
     PYTHONPATH=src python examples/numerics_sweep.py                # full
     PYTHONPATH=src python examples/numerics_sweep.py --reduced      # CI smoke
-    PYTHONPATH=src python examples/numerics_sweep.py \
-        --out examples/plans/paper_mlp.json                         # refresh
-                                                   # the checked-in fixture
+
+(The checked-in ``examples/plans/`` fixtures — paper_mlp.json and the rest of
+the per-architecture zoo — are refreshed by ``scripts/refresh_plans.py``,
+which adds trace persistence and the MANIFEST; this example stays the
+single-model walkthrough of the same pipeline.)
 
 Pipeline: (1) calibrate — one forward pass of the paper-MLP workload records
 per-site operand statistics; (2) enumerate + evaluate — each site's pruned

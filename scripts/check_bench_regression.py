@@ -1,0 +1,118 @@
+#!/usr/bin/env python
+"""Bench regression gate: diff a fresh ``bench_gemm --json`` run against the
+committed baseline (``BENCH_gemm.json`` at the repo root) and fail on any row
+whose throughput regressed more than the threshold (default 25%).
+
+Rows are matched by ``name``; throughput is the row's ``gflops`` (rows without
+a throughput figure — parity checks, summaries — are ignored). Because the
+baseline is committed from one machine and CI runs on another, the default
+comparison is **scale-calibrated**: every ratio is divided by the machine
+scale measured on the ``impl == "native"`` rows (plain XLA ``jnp.matmul`` —
+a workload this repo's kernel code cannot slow down), so a uniformly
+slower/faster runner shifts nothing while a regression in the generated FDP
+kernels still trips the gate even if it hits *every* FDP row at once.
+Falls back to the median ratio across all rows if no native row is shared.
+``--absolute`` compares raw ratios for same-machine runs.
+
+``--new`` accepts several files; each row scores its best throughput across
+runs (the quick-lane shapes are small enough that single samples are noisy
+under shared-CPU runners — CI benches twice and gates on the best).
+
+    python scripts/check_bench_regression.py --baseline BENCH_gemm.json \
+        --new BENCH_gemm.ci.json BENCH_gemm.ci2.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("bench") != "bench_gemm" or "rows" not in doc:
+        raise SystemExit(f"{path}: not a bench_gemm --json document")
+    return {r["name"]: r for r in doc["rows"] if "gflops" in r}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_gemm.json")
+    ap.add_argument("--new", required=True, nargs="+",
+                    help="fresh bench_gemm --json output(s); rows take the "
+                         "best throughput across runs")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max tolerated per-row throughput regression")
+    ap.add_argument("--absolute", action="store_true",
+                    help="raw ratios (same-machine); default calibrates out "
+                         "the runner's overall speed via the median ratio")
+    ap.add_argument("--min-seconds", type=float, default=1e-3,
+                    help="noise floor: rows whose baseline wall time per "
+                         "call is below this are reported but not gated "
+                         "(sub-ms samples swing several-fold under shared "
+                         "CPU and cannot carry a regression verdict)")
+    args = ap.parse_args(argv)
+
+    base = load_rows(args.baseline)
+    new: dict = {}
+    for path in args.new:
+        for name, row in load_rows(path).items():
+            if name not in new or row["gflops"] > new[name]["gflops"]:
+                new[name] = row
+    common = sorted(set(base) & set(new))
+    if not common:
+        raise SystemExit("no common throughput rows between baseline and new "
+                         "bench output — did the row names change?")
+    missing = sorted(set(base) - set(new))
+    if missing:
+        print(f"[bench-gate] WARNING: {len(missing)} baseline rows absent "
+              f"from the new run: {missing}")
+
+    ratios = {n: new[n]["gflops"] / base[n]["gflops"] for n in common}
+    gated = [n for n in common
+             if base[n]["seconds_per_call"] >= args.min_seconds]
+    if args.absolute:
+        scale, anchor = 1.0, "absolute"
+    else:
+        native = [ratios[n] for n in gated
+                  if base[n].get("impl") == "native"]
+        if native:
+            # the *slowest* anchor bounds how much of any row's slowdown is
+            # machine rather than code: a conservative scale keeps one lucky
+            # anchor burst from tightening the floor under every other row
+            scale, anchor = min(native), "native rows (min)"
+        else:
+            scale, anchor = statistics.median(
+                [ratios[n] for n in gated] or list(ratios.values())), \
+                "median (!)"
+    floor = scale * (1.0 - args.threshold)
+    print(f"[bench-gate] {len(gated)}/{len(common)} rows gated "
+          f"(noise floor {args.min_seconds * 1e3:.1f}ms), machine scale "
+          f"{scale:.2f}x (anchor: {anchor}), fail below {floor:.2f}x of "
+          f"baseline throughput")
+
+    failed = []
+    for name in common:
+        r = ratios[name]
+        if name not in gated:
+            verdict = "skip (sub-noise-floor sample)"
+        elif r < floor:
+            verdict = "FAIL"
+        else:
+            verdict = "ok"
+        print(f"  {name:48s} {base[name]['gflops']:9.3f} -> "
+              f"{new[name]['gflops']:9.3f} GFLOP/s  ({r:5.2f}x) {verdict}")
+        if verdict == "FAIL":
+            failed.append(name)
+
+    if failed:
+        print(f"[bench-gate] FAIL: {len(failed)} row(s) regressed more than "
+              f"{args.threshold:.0%}: {failed}")
+        sys.exit(1)
+    print("[bench-gate] OK: no row regressed beyond the threshold")
+
+
+if __name__ == "__main__":
+    main()

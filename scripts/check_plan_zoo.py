@@ -1,0 +1,124 @@
+#!/usr/bin/env python
+"""Plan-zoo gate: checked-in precision plans can never silently rot.
+
+For every ``examples/plans/*.json`` (except MANIFEST.json) this
+
+  1. loads the plan and round-trips it through ``policy_from_plan`` (the
+     exact entry point the launch drivers use), checking every site's
+     assignment survives the JSON -> NumericsPolicy path,
+  2. cross-checks the MANIFEST entry (file listed, site list and energy
+     bookkeeping in sync with the plan document),
+  3. dry-runs the plan's own architecture through the serving driver with
+     ``--precision-plan`` on the reduced config — a real forward + decode
+     under the plan's numerics, so a plan whose formats/accumulators no
+     longer load, dispatch, or produce tokens fails the lane.
+
+    PYTHONPATH=src python scripts/check_plan_zoo.py
+    PYTHONPATH=src python scripts/check_plan_zoo.py --no-serve   # fast half
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+
+PLANS_DIR = os.path.join(os.path.dirname(__file__), os.pardir,
+                         "examples", "plans")
+
+
+def check_plan(path: str, manifest: dict, serve: bool = True) -> list:
+    from repro.core.dispatch import policy_from_plan
+    from repro.numerics import PLAN_VERSION, load_plan
+
+    errors = []
+    arch_id = os.path.basename(path)[:-len(".json")]
+    plan = load_plan(path)
+    if plan.version > PLAN_VERSION:
+        errors.append(f"version {plan.version} > library {PLAN_VERSION}")
+    if not plan.sites:
+        errors.append("plan has no sites")
+
+    # 1. policy round-trip through the deployment entry point
+    policy = policy_from_plan(path)
+    for s in plan.sites:
+        got = policy.lookup(s.site).tag()
+        if got != s.cfg.tag():
+            errors.append(f"site {s.site}: policy lookup {got!r} != plan "
+                          f"{s.cfg.tag()!r}")
+    if policy.lookup("__unlisted__").tag() != plan.default.tag():
+        errors.append("default config lost in policy round-trip")
+
+    # 2. MANIFEST consistency
+    entry = manifest.get("plans", {}).get(arch_id)
+    if entry is None:
+        errors.append("no MANIFEST entry")
+    else:
+        if entry.get("sites") != [s.site for s in plan.sites]:
+            errors.append("MANIFEST site list out of sync")
+        for key in ("modeled_energy_j", "baseline_energy_j",
+                    "validated_bits"):
+            if entry.get(key) != plan.meta.get(key):
+                errors.append(f"MANIFEST {key} out of sync")
+        if entry.get("budget_bits") != plan.budget_bits:
+            errors.append("MANIFEST budget_bits out of sync")
+
+    # 3. dry-run the plan's arch under --precision-plan (one plan crashing
+    # must not mask whether the rest of the zoo still serves)
+    if serve and not errors and entry is not None:
+        from repro.launch import serve as serve_mod
+        try:
+            serve_mod.main(["--arch", entry["arch"], "--reduced",
+                            "--batch", "1", "--prompt-len", "4",
+                            "--gen", "2", "--precision-plan", path])
+        except Exception as e:
+            errors.append(f"serve dry-run crashed: {type(e).__name__}: {e}")
+    return errors
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--plans", default=PLANS_DIR)
+    ap.add_argument("--no-serve", action="store_true",
+                    help="skip the serve dry-runs (load/round-trip only)")
+    args = ap.parse_args(argv)
+
+    paths = sorted(p for p in glob.glob(os.path.join(args.plans, "*.json"))
+                   if os.path.basename(p) != "MANIFEST.json")
+    if not paths:
+        raise SystemExit(f"no plans found under {args.plans}")
+    manifest_path = os.path.join(args.plans, "MANIFEST.json")
+    if not os.path.exists(manifest_path):
+        raise SystemExit(f"missing {manifest_path} — run "
+                         "scripts/refresh_plans.py")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    listed = set(manifest.get("plans", {}))
+    on_disk = {os.path.basename(p)[:-len('.json')] for p in paths}
+    failures = 0
+    for stale in sorted(listed - on_disk):
+        print(f"[plan-zoo] {stale}: MANIFEST lists a plan with no file")
+        failures += 1
+
+    for path in paths:
+        name = os.path.basename(path)
+        errors = check_plan(path, manifest, serve=not args.no_serve)
+        if errors:
+            failures += 1
+            print(f"[plan-zoo] {name}: FAIL")
+            for e in errors:
+                print(f"    - {e}")
+        else:
+            print(f"[plan-zoo] {name}: OK")
+
+    if failures:
+        print(f"[plan-zoo] FAIL: {failures} problem(s)")
+        sys.exit(1)
+    print(f"[plan-zoo] OK: {len(paths)} plans load, round-trip, and serve")
+
+
+if __name__ == "__main__":
+    main()

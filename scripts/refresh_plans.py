@@ -1,0 +1,301 @@
+#!/usr/bin/env python
+"""Plan-zoo refresh: calibrate + search a PrecisionPlan for every architecture.
+
+The paper tailors one GEMM; ``repro.numerics`` tailors one model; this sweep
+tailors the whole zoo. Per architecture it
+
+  1. **calibrates** — one forward pass under the fast fp32 native policy with
+     the dispatch trace hook installed, recording every call-site's operand
+     statistics and samples (transformer attn/mlp sites, MoE router + expert
+     sites, SSM scan-block sites, multimodal prefix sites);
+  2. **persists the trace** — a versioned ``CalibrationTrace`` JSON keyed by
+     the config fingerprint, so later refreshes (and ``--check`` CI runs)
+     search from the saved trace without re-calibrating;
+  3. **searches** — the per-site (format x accumulator x backend) Pareto
+     sweep against the bit-exact FDP oracle, validated end-to-end vs the
+     uniform 91-bit policy;
+  4. **emits** ``examples/plans/<arch>.json`` plus a ``MANIFEST.json``
+     summarizing modeled-energy savings and validated bits per arch — the
+     artifacts the CI ``plan-zoo`` lane guards.
+
+Usage:
+    PYTHONPATH=src python scripts/refresh_plans.py --reduced            # all
+    PYTHONPATH=src python scripts/refresh_plans.py --only dbrx_132b --reduced
+    PYTHONPATH=src python scripts/refresh_plans.py --reduced --jobs 3
+    PYTHONPATH=src python scripts/refresh_plans.py --only paper_mlp --reduced \
+        --check     # recompute from the saved trace, compare to checked-in
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+
+MANIFEST_VERSION = 1
+MANIFEST_KIND = "repro.numerics.PlanManifest"
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), os.pardir,
+                           "examples", "plans")
+
+# Calibration shape: small enough for CPU, large enough that every scanned
+# site fires and operand extremes are representative.
+CAL_BATCH, CAL_SEQ, CAL_SEED = 2, 8, 0
+
+
+def _alias_of(arch_id: str) -> str:
+    from repro.configs import _ALIASES
+    for alias, mod in _ALIASES.items():
+        if mod == arch_id:
+            return alias
+    return arch_id
+
+
+def _calibration_spec(cfg, reduced: bool) -> dict:
+    """Everything the trace depends on — hashed into the fingerprint."""
+    import dataclasses
+    return {"config": dataclasses.asdict(cfg), "reduced": reduced,
+            "batch": CAL_BATCH, "seq": CAL_SEQ, "seed": CAL_SEED,
+            "calibration_policy": "mxu_fp32"}
+
+
+def _calibration_batch(cfg, key):
+    import jax
+    import jax.numpy as jnp
+    ks = jax.random.split(key, 3)
+    batch = {"tokens": jax.random.randint(
+        ks[0], (CAL_BATCH, CAL_SEQ), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["patches"] = 0.5 * jax.random.normal(
+            ks[1], (CAL_BATCH, cfg.n_patches, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        batch["frames"] = 0.5 * jax.random.normal(
+            ks[2], (CAL_BATCH, cfg.enc_seq, cfg.d_model), jnp.float32)
+    return batch
+
+
+def refresh_arch(arch_id: str, args) -> dict:
+    """Calibrate (or reload the saved trace) + search one architecture;
+    returns the plan's manifest entry. Writes the plan unless --check."""
+    import numpy as np
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.dispatch import FDP91, MXU_FP32, use_policy
+    from repro.core.metrics import correct_bits
+    from repro.models import LOCAL, forward, init
+    from repro.numerics import (calibrate, config_fingerprint, load_plan,
+                                load_trace, search)
+
+    t0 = time.time()
+    cfg = get_config(arch_id)
+    if args.reduced:
+        cfg = cfg.reduced()
+    fp = config_fingerprint(_calibration_spec(cfg, args.reduced))
+    traces_dir = os.path.join(args.out, "traces")
+    os.makedirs(traces_dir, exist_ok=True)
+    trace_path = os.path.join(traces_dir, f"{arch_id}.trace.json")
+    plan_path = os.path.join(args.out, f"{arch_id}.json")
+
+    params = init(cfg, jax.random.key(CAL_SEED))
+    batch = _calibration_batch(cfg, jax.random.key(CAL_SEED + 1))
+
+    trace = None
+    if os.path.exists(trace_path) and not args.recalibrate:
+        try:
+            trace = load_trace(trace_path, expect_fingerprint=fp)
+            print(f"[{arch_id}] trace loaded from {trace_path} "
+                  f"(calibration skipped, fingerprint {fp})")
+        except ValueError as e:
+            print(f"[{arch_id}] saved trace is stale: {e}")
+    if trace is None and args.check:
+        # the reproducibility gate's whole claim is "searched from the saved
+        # trace, no recalibration" — a missing/stale trace must fail loudly,
+        # not quietly recalibrate into a possibly-matching plan
+        raise SystemExit(
+            f"[{arch_id}] --check FAILED: no usable saved trace at "
+            f"{trace_path} (expected fingerprint {fp}) — refresh and "
+            f"commit the trace before gating on it")
+    if trace is None:
+        print(f"[{arch_id}] calibrating {cfg.name} "
+              f"(batch={CAL_BATCH}, seq={CAL_SEQ})")
+        with calibrate() as trace, use_policy(MXU_FP32):
+            jax.block_until_ready(
+                forward(params, cfg, batch, LOCAL, remat="none"))
+        trace.save(trace_path, fingerprint=fp,
+                   meta={"arch": arch_id, "arch_alias": _alias_of(arch_id),
+                         "config_name": cfg.name, "family": cfg.family,
+                         "reduced": args.reduced,
+                         "batch": CAL_BATCH, "seq": CAL_SEQ})
+        print(f"[{arch_id}] trace saved to {trace_path}")
+
+    # end-to-end validation oracle: the paper's uniform 91-bit FDP policy
+    with use_policy(FDP91):
+        ref = np.asarray(forward(params, cfg, batch, LOCAL, remat="none"))
+
+    def validate(policy):
+        with use_policy(policy):
+            out = np.asarray(forward(params, cfg, batch, LOCAL,
+                                     remat="none"))
+        return float(np.median(correct_bits(out, ref, cap=24)))
+
+    grid = dict(widths=(32,)) if args.reduced else dict(widths=(24, 40, 64))
+    res = search(trace, budget_bits=args.budget, name=cfg.name,
+                 validate=validate, **grid)
+    plan = res.plan
+    plan.meta.update({
+        "arch": arch_id, "arch_alias": _alias_of(arch_id),
+        "family": cfg.family, "reduced": args.reduced,
+        "fingerprint": fp,
+        "trace": os.path.join("traces", f"{arch_id}.trace.json"),
+    })
+    print(res.describe())
+
+    if args.check:
+        want = load_plan(plan_path)
+        got_sites = {s.site: s.cfg.tag() for s in plan.sites}
+        want_sites = {s.site: s.cfg.tag() for s in want.sites}
+        if got_sites != want_sites:
+            raise SystemExit(
+                f"[{arch_id}] --check FAILED: recomputed plan differs from "
+                f"{plan_path}\n  recomputed: {got_sites}\n"
+                f"  checked-in: {want_sites}")
+        print(f"[{arch_id}] --check OK: recomputed plan matches {plan_path} "
+              f"({len(got_sites)} sites, {time.time() - t0:.0f}s)")
+    else:
+        plan.save(plan_path)
+        print(f"[{arch_id}] plan written to {plan_path} "
+              f"({time.time() - t0:.0f}s)")
+    return manifest_entry(arch_id, plan)
+
+
+def manifest_entry(arch_id: str, plan) -> dict:
+    m = plan.meta
+    return {
+        "file": f"{arch_id}.json",
+        "name": plan.name,
+        "arch": m.get("arch_alias", arch_id),
+        "family": m.get("family"),
+        "reduced": m.get("reduced"),
+        "budget_bits": plan.budget_bits,
+        "validated_bits": m.get("validated_bits"),
+        "modeled_energy_j": m.get("modeled_energy_j"),
+        "baseline_energy_j": m.get("baseline_energy_j"),
+        "energy_vs_baseline": m.get("energy_vs_baseline"),
+        "n_sites": len(plan.sites),
+        "sites": [s.site for s in plan.sites],
+        "fingerprint": m.get("fingerprint"),
+        "trace": m.get("trace"),
+    }
+
+
+def rebuild_manifest(out_dir: str) -> dict:
+    """Regenerate MANIFEST.json from the plan files on disk (idempotent, so
+    parallel --jobs children don't race on it — only the parent writes)."""
+    from repro.numerics import load_plan
+    plans = {}
+    for fn in sorted(os.listdir(out_dir)):
+        if not fn.endswith(".json") or fn == "MANIFEST.json":
+            continue
+        arch_id = fn[:-len(".json")]
+        plans[arch_id] = manifest_entry(arch_id,
+                                        load_plan(os.path.join(out_dir, fn)))
+    doc = {"kind": MANIFEST_KIND, "version": MANIFEST_VERSION,
+           "generated_by": "scripts/refresh_plans.py", "plans": plans}
+    path = os.path.join(out_dir, "MANIFEST.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"[manifest] {len(plans)} plans -> {path}")
+    return doc
+
+
+def _spawn(arch_id: str, args) -> tuple:
+    """Child process for --jobs fan-out (the calibration hook is process-
+    global, so parallelism must be process-level, not threads)."""
+    cmd = [sys.executable, os.path.abspath(__file__), "--only", arch_id,
+           "--budget", str(args.budget), "--out", args.out, "--no-manifest"]
+    for flag in ("reduced", "recalibrate", "check"):
+        if getattr(args, flag):
+            cmd.append(f"--{flag}")
+    env = dict(os.environ)
+    t0 = time.time()
+    try:
+        r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                           timeout=3600)
+        rc, out = r.returncode, r.stdout + "\n" + r.stderr
+    except subprocess.TimeoutExpired as e:
+        # one slow arch is that arch's failure, not the whole sweep's
+        rc = -1
+        partial = e.stdout if isinstance(e.stdout, str) else ""
+        out = f"[{arch_id}] timed out after {e.timeout:.0f}s\n{partial}"
+    if rc != 0:
+        sys.stderr.write(out)
+    return arch_id, rc, time.time() - t0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", action="append", default=None,
+                    help="restrict to these arch ids (repeatable)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced() configs (CPU-sized; what CI checks in)")
+    ap.add_argument("--budget", type=float, default=10.0)
+    ap.add_argument("--resume", action="store_true",
+                    help="skip archs whose plan file already exists")
+    ap.add_argument("--recalibrate", action="store_true",
+                    help="ignore saved traces, re-run calibration forwards")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="process-parallel arch fan-out")
+    ap.add_argument("--check", action="store_true",
+                    help="recompute and compare against the checked-in plan "
+                         "instead of writing (CI reproducibility gate)")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--no-manifest", action="store_true",
+                    help="skip the MANIFEST rebuild (used by --jobs children)")
+    args = ap.parse_args(argv)
+    args.out = os.path.abspath(args.out)
+
+    from repro.configs import ARCH_IDS
+    archs = list(args.only) if args.only else list(ARCH_IDS)
+    unknown = [a for a in archs if a not in ARCH_IDS]
+    if unknown:
+        raise SystemExit(f"unknown arch ids {unknown}; known: {ARCH_IDS}")
+    if args.resume:
+        archs = [a for a in archs
+                 if not os.path.exists(os.path.join(args.out, f"{a}.json"))]
+        if not archs:
+            print("[refresh] nothing to do (--resume: all plans exist)")
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = 0
+    if args.jobs > 1 and len(archs) > 1:
+        with ThreadPoolExecutor(max_workers=args.jobs) as ex:
+            for arch_id, rc, dt in ex.map(lambda a: _spawn(a, args), archs):
+                status = "ok" if rc == 0 else f"FAIL rc={rc}"
+                print(f"[refresh] {arch_id}: {status} ({dt:.0f}s)",
+                      flush=True)
+                failures += rc != 0
+    else:
+        for arch_id in archs:
+            try:
+                refresh_arch(arch_id, args)
+            except SystemExit:
+                raise
+            except Exception as e:          # keep sweeping, report at exit
+                failures += 1
+                import traceback
+                print(f"[refresh] {arch_id}: FAIL {type(e).__name__}: {e}")
+                traceback.print_exc()
+
+    if not args.no_manifest and not args.check:
+        rebuild_manifest(args.out)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -320,12 +320,18 @@ def gemm(a: Array, b: Array, *, site: str = "generic",
     pol = policy or current_policy()
     cfg = pol.lookup(site)
     _SITES_SEEN.add(site)
+    out = _execute(cfg, a, b, plan=plan)
+    return _maybe_trace(site, cfg, a, b, out)
 
+
+def _execute(cfg: GemmConfig, a: Array, b: Array, *,
+             plan: Optional[GemmPlan] = None) -> Array:
+    """Run one matmul under a resolved GemmConfig (the mode switch, without
+    policy lookup or trace reporting — shared by gemm/ragged_gemm)."""
     if cfg.mode == "native":
         dt = cfg.fmt.jnp_dtype
-        out = jnp.matmul(a.astype(dt), b.astype(dt),
-                         preferred_element_type=jnp.float32)
-        return _maybe_trace(site, cfg, a, b, out)
+        return jnp.matmul(a.astype(dt), b.astype(dt),
+                          preferred_element_type=jnp.float32)
 
     # FDP modes: float inputs are rounded onto the format's grid first (the
     # paper's format front end — bf16 under a wide accumulator really sees
@@ -336,14 +342,57 @@ def gemm(a: Array, b: Array, *, site: str = "generic",
     if cfg.mode == "simulate":
         from . import fdp
         f = lambda x, y: fdp.fdp_gemm(x, y, cfg.acc, cfg.fmt)
-        return _maybe_trace(site, cfg, a, b, _batched_apply(f, a, b))
+        return _batched_apply(f, a, b)
 
     # pallas: plan-cached block sizes, native batched grid for N-D inputs
     from repro.kernels import ops as kops
     plan = plan or _plan_for_operands(a, b, cfg)
-    out = kops.fdp_gemm_nd(a, b, spec=cfg.acc, fmt=cfg.fmt,
-                           bm=plan.bm, bn=plan.bn, bk=plan.bk)
-    return _maybe_trace(site, cfg, a, b, out)
+    return kops.fdp_gemm_nd(a, b, spec=cfg.acc, fmt=cfg.fmt,
+                            bm=plan.bm, bn=plan.bn, bk=plan.bk)
+
+
+def ragged_gemm(x: Array, w: Array, group_sizes: Array, *,
+                site: str = "moe_expert",
+                policy: Optional[NumericsPolicy] = None) -> Array:
+    """Grouped (expert) GEMM: ``x (T, d)`` rows sorted by group, ``w (E, d, f)``
+    per-group weights, ``group_sizes (E,)`` rows per group. Output ``(T, f)``
+    f32 — row t contracts against its group's weight matrix.
+
+    Native mode stays on the fused ``jax.lax.ragged_dot`` fast path (operands
+    cast onto the policy format's grid, f32 accumulate — same front end as
+    ``gemm``). FDP modes run the reference grouped path: one dispatched GEMM
+    per group over the full token block, rows selected by segment id — T×E
+    work instead of T, but every expert MAC goes through the site's exact
+    ⟨ovf,msb,lsb⟩ datapath, which is what makes MoE *expert* sites (not just
+    the router) tailorable and plan-servable.
+
+    Tracing reports one aggregate call: operand stats over all tokens and all
+    group weights, MACs = T·d·f (each sorted row hits exactly one expert).
+    """
+    pol = policy or current_policy()
+    cfg = pol.lookup(site)
+    _SITES_SEEN.add(site)
+    E, d, f = w.shape
+    if cfg.mode == "native":
+        dt = cfg.fmt.jnp_dtype
+        out = jax.lax.ragged_dot(x.astype(dt), w.astype(dt), group_sizes,
+                                 preferred_element_type=jnp.float32)
+    else:
+        # segment id per sorted row from the group-size prefix sums
+        bounds = jnp.cumsum(group_sizes)
+        seg = jnp.sum(jnp.arange(x.shape[0])[:, None] >= bounds[None, :],
+                      axis=1)                                       # (T,)
+        per_expert = jax.vmap(lambda we: _execute(cfg, x, we))(w)   # (E,T,f)
+        out = jnp.take_along_axis(
+            per_expert, jnp.minimum(seg, E - 1)[None, :, None], axis=0)[0]
+        # rows beyond sum(group_sizes) (padding) belong to no group: zero
+        # them like the native ragged_dot path, so flipping a site between
+        # native and FDP candidates never changes padded-row outputs
+        out = jnp.where((seg < E)[:, None], out, 0.0)
+    # report as one (T, d) x (d, f) call: k/m from x, n and weight stats from
+    # the flattened expert stack (the sample decoder reshapes (-1, d, f) and
+    # keeps group 0's block)
+    return _maybe_trace(site, cfg, x, w.reshape(E * d, f), out)
 
 
 def _batched_apply(f, a: Array, b: Array) -> Array:

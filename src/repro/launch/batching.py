@@ -13,16 +13,32 @@ scheduler end-to-end.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from collections import deque
-from typing import Callable, Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.dispatch import NumericsPolicy, policy_from_plan, use_policy
 from repro.models import decode_step, init_cache
 from repro.models.layers import LOCAL
+
+
+def _resolve_policy(policy) -> Optional[NumericsPolicy]:
+    """Normalize the engine's numerics argument: a NumericsPolicy passes
+    through, a PrecisionPlan deploys itself, a str/path loads a plan JSON."""
+    if policy is None or isinstance(policy, NumericsPolicy):
+        return policy
+    if hasattr(policy, "to_policy"):               # PrecisionPlan duck-type
+        return policy.to_policy()
+    if isinstance(policy, (str, bytes)) or hasattr(policy, "__fspath__"):
+        return policy_from_plan(policy)
+    raise TypeError(
+        f"policy must be a NumericsPolicy, PrecisionPlan, or plan path; "
+        f"got {type(policy).__name__}")
 
 
 @dataclasses.dataclass
@@ -45,12 +61,25 @@ class ContinuousBatcher:
 
     def __init__(self, cfg, params, n_slots: int = 4, max_len: int = 128,
                  dist=LOCAL, eos_id: Optional[int] = None,
-                 warmup: bool = False):
+                 warmup: Union[bool, NumericsPolicy, str, object] = False,
+                 policy=None):
         self.cfg, self.params, self.dist = cfg, params, dist
         self.n_slots, self.max_len = n_slots, max_len
         self.eos_id = eos_id
         assert cfg.family in ("dense", "moe", "vlm"), \
             "continuous batching engine supports KV-cache families"
+        # ``warmup`` doubles as the numerics argument: passing a
+        # NumericsPolicy / PrecisionPlan / plan path both installs the policy
+        # AND warms up under it (the common plan-serving call shape).
+        if not isinstance(warmup, bool):
+            if policy is not None:
+                raise TypeError(
+                    "pass the numerics either as warmup=<plan/policy> or as "
+                    "policy=..., not both — silently preferring one would "
+                    "bake the other's formats out of the compiled step")
+            policy = warmup
+            warmup = True
+        self.policy = _resolve_policy(policy)
         self.queue: deque[Request] = deque()
         self.active: list[Optional[Request]] = [None] * n_slots
         # per-slot progress: how many prompt tokens already fed
@@ -61,22 +90,40 @@ class ContinuousBatcher:
         # previous occupant's KV
         self._start = np.zeros(n_slots, dtype=np.int32)
         self.cache["start"] = jnp.zeros((n_slots,), jnp.int32)
-        self._step = jax.jit(
-            lambda c, t: decode_step(params, cfg, c, t, dist))
+        # traced exactly once per engine when warmed up — the regression
+        # guard for "warmup must compile under the serving policy"
+        self.trace_count = 0
+
+        def _step_fn(c, t):
+            self.trace_count += 1            # python side effect: trace-time only
+            return decode_step(params, cfg, c, t, dist)
+
+        self._step = jax.jit(_step_fn)
         if warmup:
             # AOT-compile the decode step before the first request arrives.
             # Tracing it resolves every GEMM call-site's GemmPlan (the plan
             # cache is keyed on static shapes), so serving never pays plan
-            # resolution or compilation inside the request loop.
+            # resolution or compilation inside the request loop. Numerics
+            # policies bind at *trace* time (dispatch.gemm looks the site up
+            # while tracing), so warmup must happen inside the policy context
+            # — a warmup under the wrong policy would bake the wrong formats
+            # into the compiled step and silently ignore the plan at serve
+            # time. This is the ROADMAP "batching under plans" fix.
             tok0 = jnp.zeros((n_slots, 1), jnp.int32)
-            self._step = self._step.lower(self.cache, tok0).compile()
+            with self._policy_ctx():
+                self._step = self._step.lower(self.cache, tok0).compile()
+
+    def _policy_ctx(self):
+        return use_policy(self.policy) if self.policy is not None \
+            else contextlib.nullcontext()
 
     def numerics_info(self) -> dict:
         """GemmPlan cache + call-site report for this engine's decode step
         (introspection: what the dispatch layer planned for serving)."""
         from repro.core import dispatch
         return {"plans": dispatch.plan_cache_info(),
-                "sites": sorted(dispatch.sites_seen())}
+                "sites": sorted(dispatch.sites_seen()),
+                "policy": self.policy.name if self.policy else None}
 
     def submit(self, req: Request):
         self.queue.append(req)
@@ -111,7 +158,11 @@ class ContinuousBatcher:
         if all(r is None for r in self.active):
             return False
         toks = self._next_tokens()
-        logits, self.cache = self._step(self.cache, toks)
+        # non-warmed engines trace lazily on the first step; entering the
+        # policy context here keeps that trace (and any retrace) under the
+        # same numerics the warmup path compiles with
+        with self._policy_ctx():
+            logits, self.cache = self._step(self.cache, toks)
         nxt = np.asarray(jnp.argmax(logits[:, 0, :self.cfg.vocab_size], -1))
         for i, req in enumerate(self.active):
             if req is None:
@@ -135,9 +186,11 @@ class ContinuousBatcher:
 
 
 def serve_requests(cfg, params, requests: list[Request], n_slots: int = 4,
-                   max_len: int = 128, dist=LOCAL) -> list[Request]:
+                   max_len: int = 128, dist=LOCAL, warmup=False,
+                   policy=None) -> list[Request]:
     """Convenience: run a list of requests to completion."""
-    eng = ContinuousBatcher(cfg, params, n_slots, max_len, dist)
+    eng = ContinuousBatcher(cfg, params, n_slots, max_len, dist,
+                            warmup=warmup, policy=policy)
     for r in requests:
         eng.submit(r)
     eng.run()

@@ -7,6 +7,10 @@ Local (CPU) example:
 
 ``--precision-plan plan.json`` serves under a numerics plan produced by the
 ``repro.numerics`` tailoring search instead of the default uniform policy.
+``--engine continuous`` routes the same requests through the fixed-slot
+``ContinuousBatcher`` with plan-aware AOT warmup (the decode step compiles
+under the plan's formats before the first request arrives, so plan-served
+decode hits the compile cache instead of retracing mid-request).
 """
 
 from __future__ import annotations
@@ -55,6 +59,10 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--precision-plan", default=None,
                     help="serve under a repro.numerics PrecisionPlan JSON")
+    ap.add_argument("--engine", default="simple",
+                    choices=["simple", "continuous"],
+                    help="simple whole-batch decode, or the fixed-slot "
+                         "ContinuousBatcher with plan-aware warmup")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -64,15 +72,35 @@ def main(argv=None):
     prompts = jax.random.randint(jax.random.key(1),
                                  (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
-    ctx = (use_policy(policy_from_plan(args.precision_plan))
-           if args.precision_plan else contextlib.nullcontext())
+    policy = (policy_from_plan(args.precision_plan)
+              if args.precision_plan else None)
     t0 = time.time()
-    with ctx:
-        toks = serve(cfg, params, prompts, args.gen)
+    if args.engine == "continuous":
+        from repro.launch.batching import ContinuousBatcher, Request
+        if cfg.family not in ("dense", "moe", "vlm"):
+            raise SystemExit(
+                f"--engine continuous supports KV-cache families "
+                f"(dense/moe/vlm); {args.arch} is family={cfg.family!r} — "
+                f"use the default --engine simple")
+        eng = ContinuousBatcher(
+            cfg, params, n_slots=args.batch,
+            max_len=args.prompt_len + 2 * args.gen + 2,
+            warmup=policy if policy is not None else True)
+        reqs = [Request(uid=i, prompt=row.tolist(), max_new=args.gen)
+                for i, row in enumerate(jnp.asarray(prompts))]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        toks = jnp.asarray([r.out for r in reqs])
+    else:
+        ctx = use_policy(policy) if policy is not None \
+            else contextlib.nullcontext()
+        with ctx:
+            toks = serve(cfg, params, prompts, args.gen)
     dt = time.time() - t0
     plan_note = f" plan={args.precision_plan}" if args.precision_plan else ""
-    print(f"[serve] {args.arch}: batch={args.batch} prompt={args.prompt_len} "
-          f"gen={args.gen} in {dt:.2f}s "
+    print(f"[serve] {args.arch}: engine={args.engine} batch={args.batch} "
+          f"prompt={args.prompt_len} gen={args.gen} in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s){plan_note}")
     print("sample:", toks[0].tolist())
 

@@ -50,11 +50,15 @@ def _route(x_flat, router_w, cfg):
 
 
 def _moe_ffn(x_sorted, group_sizes, cfg, wi, wg, wo):
-    """Grouped GLU FFN over expert-sorted tokens."""
-    h_in = jax.lax.ragged_dot(x_sorted, wi, group_sizes)
-    h_gate = jax.lax.ragged_dot(x_sorted, wg, group_sizes)
+    """Grouped GLU FFN over expert-sorted tokens, dispatched per call-site
+    (moe_in / moe_gate / moe_out) so expert GEMMs are calibratable and
+    plan-tailorable like every other site; the default native policy stays
+    on the fused ragged_dot fast path."""
+    h_in = dispatch.ragged_gemm(x_sorted, wi, group_sizes, site="moe_in")
+    h_gate = dispatch.ragged_gemm(x_sorted, wg, group_sizes, site="moe_gate")
     h = activate(h_gate, cfg.act) * h_in
-    return jax.lax.ragged_dot(h.astype(x_sorted.dtype), wo, group_sizes)
+    return dispatch.ragged_gemm(h.astype(x_sorted.dtype), wo, group_sizes,
+                                site="moe_out")
 
 
 def _moe_inner(x_flat, router_w, wi, wg, wo, cfg):

@@ -13,14 +13,16 @@
 #                assignment meeting an end-to-end error budget
 #   plan       - serializable PrecisionPlan (JSON, versioned) that loads into
 #                a NumericsPolicy with per-site overrides (--precision-plan)
-from .trace import CalibrationTrace, SiteProfile, calibrate
+from .trace import (TRACE_VERSION, CalibrationTrace, SiteProfile, calibrate,
+                    config_fingerprint, load_trace)
 from .candidates import Candidate, enumerate_candidates
 from .search import (Evaluated, SearchResult, evaluate_candidates,
                      pareto_frontier, search)
 from .plan import (PLAN_VERSION, PrecisionPlan, SitePlan, load_plan)
 
 __all__ = [
-    "CalibrationTrace", "SiteProfile", "calibrate",
+    "TRACE_VERSION", "CalibrationTrace", "SiteProfile", "calibrate",
+    "config_fingerprint", "load_trace",
     "Candidate", "enumerate_candidates",
     "Evaluated", "SearchResult", "evaluate_candidates", "pareto_frontier",
     "search",

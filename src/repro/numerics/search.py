@@ -247,6 +247,9 @@ def search(trace: CalibrationTrace, budget_bits: float, *,
     plan = assemble()
     if validated is not None:
         plan.meta["validated_bits"] = validated
+    if getattr(trace, "fingerprint", None):
+        # provenance: which persisted calibration this plan was searched from
+        plan.meta["trace_fingerprint"] = trace.fingerprint
     return SearchResult(plan, decisions, validated)
 
 

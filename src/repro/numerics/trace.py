@@ -22,8 +22,11 @@ call counts accordingly; trace un-rematted forwards for clean statistics.
 
 from __future__ import annotations
 
+import base64
 import contextlib
 import dataclasses
+import hashlib
+import json
 import math
 import threading
 from functools import partial
@@ -36,6 +39,44 @@ import numpy as np
 from repro.core import dispatch
 from repro.core.accumulator import AccumulatorSpec
 from repro.core.formats import PositFormat
+
+TRACE_VERSION = 1
+TRACE_KIND = "repro.numerics.CalibrationTrace"
+
+
+def config_fingerprint(obj) -> str:
+    """Stable short hash of a config-like object (dataclass, dict, anything
+    JSON-renderable). Saved into trace documents so a trace calibrated under
+    one (model config, calibration shape) is never silently reused for
+    another."""
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        obj = dataclasses.asdict(obj)
+    blob = json.dumps(obj, sort_keys=True, default=repr)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def _encode_array(x: Optional[np.ndarray]) -> Optional[dict]:
+    if x is None:
+        return None
+    x = np.ascontiguousarray(x)
+    return {"dtype": str(x.dtype), "shape": list(x.shape),
+            "data": base64.b64encode(x.tobytes()).decode("ascii")}
+
+
+def _decode_array(d: Optional[dict]) -> Optional[np.ndarray]:
+    if d is None:
+        return None
+    raw = base64.b64decode(d["data"])
+    return np.frombuffer(raw, dtype=np.dtype(d["dtype"])).reshape(d["shape"]).copy()
+
+
+def _enc_float(v: float):
+    """JSON-safe float: math.inf (the min-tracker's initial value) -> None."""
+    return None if not math.isfinite(v) else v
+
+
+def _dec_float(v, default: float) -> float:
+    return default if v is None else float(v)
 
 
 def _floor_log2(v: float) -> Optional[int]:
@@ -149,6 +190,42 @@ class SiteProfile:
             "msb_required": self.msb_required,
         }
 
+    def to_full_dict(self) -> dict:
+        """Lossless serialization (everything ``_record`` accumulates,
+        including the operand samples) — the persistence format behind
+        ``CalibrationTrace.save``. ``to_dict`` stays the human summary."""
+        return {
+            "site": self.site, "calls": self.calls, "macs": self.macs,
+            "max_k": self.max_k,
+            "shapes": [[list(k), v] for k, v in sorted(self.shapes.items())],
+            "cfg_tags": sorted(self.cfg_tags),
+            "a_abs_max": self.a_abs_max,
+            "a_abs_min_nz": _enc_float(self.a_abs_min_nz),
+            "b_abs_max": self.b_abs_max,
+            "b_abs_min_nz": _enc_float(self.b_abs_min_nz),
+            "out_abs_max": self.out_abs_max,
+            "out_abs_min_nz": _enc_float(self.out_abs_min_nz),
+            "sample_a": _encode_array(self.sample_a),
+            "sample_b": _encode_array(self.sample_b),
+        }
+
+    @classmethod
+    def from_full_dict(cls, d: dict) -> "SiteProfile":
+        return cls(
+            site=d["site"], calls=int(d["calls"]), macs=int(d["macs"]),
+            max_k=int(d["max_k"]),
+            shapes={tuple(k): int(v) for k, v in d["shapes"]},
+            cfg_tags=set(d.get("cfg_tags", ())),
+            a_abs_max=float(d["a_abs_max"]),
+            a_abs_min_nz=_dec_float(d["a_abs_min_nz"], math.inf),
+            b_abs_max=float(d["b_abs_max"]),
+            b_abs_min_nz=_dec_float(d["b_abs_min_nz"], math.inf),
+            out_abs_max=float(d["out_abs_max"]),
+            out_abs_min_nz=_dec_float(d["out_abs_min_nz"], math.inf),
+            sample_a=_decode_array(d.get("sample_a")),
+            sample_b=_decode_array(d.get("sample_b")),
+        )
+
     def describe(self) -> str:
         return (f"{self.site:14s} calls={self.calls:<5d} "
                 f"macs={self.macs:.2e} K<={self.max_k} "
@@ -164,6 +241,8 @@ class CalibrationTrace:
     def __init__(self):
         self._lock = threading.Lock()
         self._profiles: dict[str, SiteProfile] = {}
+        self.fingerprint: Optional[str] = None     # set by load()/callers
+        self.meta: dict = {}
 
     # -- recording (called from jax.debug.callback on host) ---------------
     def _record(self, site, batch, m, n, k, tag, keep_sample,
@@ -217,6 +296,73 @@ class CalibrationTrace:
 
     def to_dict(self) -> dict:
         return {s: p.to_dict() for s, p in self.profiles().items()}
+
+    # -- persistence -------------------------------------------------------
+    # Calibration is the expensive half of the tailoring pipeline (it runs
+    # real forwards of the target model); serializing the trace — including
+    # the operand samples the search replays — decouples it from search
+    # iterations: recalibrate only when the config fingerprint changes.
+    def save(self, path, *, fingerprint: Optional[str] = None,
+             meta: Optional[dict] = None) -> None:
+        if fingerprint is not None:
+            # a freshly-calibrated trace becomes fingerprinted the moment it
+            # is persisted, so searches from the live trace and from a later
+            # reload record identical provenance (plan JSONs stay stable
+            # across the two refresh paths)
+            self.fingerprint = fingerprint
+        if meta is not None:
+            self.meta = dict(meta)
+        doc = {
+            "version": TRACE_VERSION,
+            "kind": TRACE_KIND,
+            # omitted arguments fall back to the trace's own provenance, so
+            # load -> save round-trips never strip fingerprint/meta
+            "fingerprint": self.fingerprint,
+            "meta": dict(self.meta),
+            "profiles": [p.to_full_dict()
+                         for _, p in sorted(self.profiles().items())],
+        }
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+
+    @classmethod
+    def load(cls, path, *,
+             expect_fingerprint: Optional[str] = None) -> "CalibrationTrace":
+        """Load a saved trace. Rejects documents of the wrong kind, a newer
+        schema version, or (when ``expect_fingerprint`` is given) a trace
+        calibrated under a different config fingerprint."""
+        with open(path) as f:
+            doc = json.load(f)
+        if doc.get("kind") != TRACE_KIND or "profiles" not in doc:
+            raise ValueError(
+                f"{path}: not a CalibrationTrace document "
+                f"(kind={doc.get('kind')!r})")
+        version = int(doc.get("version", 0))
+        if version > TRACE_VERSION:
+            raise ValueError(
+                f"{path}: trace schema version {version} is newer than this "
+                f"library's {TRACE_VERSION}; refusing to guess its semantics")
+        if expect_fingerprint is not None and \
+                doc.get("fingerprint") != expect_fingerprint:
+            raise ValueError(
+                f"{path}: trace fingerprint {doc.get('fingerprint')!r} does "
+                f"not match the expected config fingerprint "
+                f"{expect_fingerprint!r} — recalibrate (the model config or "
+                f"calibration shape changed since this trace was saved)")
+        trace = cls()
+        trace.fingerprint = doc.get("fingerprint")
+        trace.meta = dict(doc.get("meta", {}))
+        for pd in doc["profiles"]:
+            p = SiteProfile.from_full_dict(pd)
+            trace._profiles[p.site] = p
+        return trace
+
+
+def load_trace(path, *, expect_fingerprint: Optional[str] = None
+               ) -> CalibrationTrace:
+    """Module-level convenience mirror of ``CalibrationTrace.load``."""
+    return CalibrationTrace.load(path, expect_fingerprint=expect_fingerprint)
 
 
 def _as_float(fmt, x):

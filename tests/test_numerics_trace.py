@@ -110,3 +110,154 @@ def test_grouped_einsums_are_traced():
     assert p.calls == 1
     assert p.max_k == 8                       # contraction over head_dim
     assert p.macs == (2 * 2) * (3 * 5) * 7 * 8
+
+
+def test_ragged_gemm_expert_sites_traced():
+    """MoE expert GEMMs report one aggregate call per site: MACs = T*d*f
+    (each sorted row hits exactly one expert) and the sample keeps the
+    group-0 weight block."""
+    from repro.core.dispatch import ragged_gemm
+    rng = np.random.default_rng(1043)
+    T, d, f, E = 12, 16, 8, 4
+    x = jnp.asarray(rng.standard_normal((T, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((E, d, f)), jnp.float32)
+    sizes = jnp.asarray([3, 3, 3, 3], jnp.int32)
+    with calibrate() as tr, use_policy(MXU_FP32):
+        out = ragged_gemm(x, w, sizes, site="t_ragged")
+    p = tr.profile("t_ragged")
+    assert p.calls == 1 and p.macs == T * d * f and p.max_k == d
+    assert p.sample_b.shape == (d, f)
+    np.testing.assert_array_equal(
+        p.sample_b, np.asarray(w[0], np.float32))
+    ref = np.concatenate([np.asarray(x[i * 3:(i + 1) * 3] @ w[i])
+                          for i in range(E)])
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-5, atol=1e-5)
+
+
+def test_ragged_gemm_fdp_matches_grouping():
+    """The FDP per-expert reference path routes each row through its own
+    expert under the exact accumulator (parity with per-group np matmul)."""
+    from repro.core.accumulator import AccumulatorSpec
+    from repro.core.dispatch import (GemmConfig, NumericsPolicy, ragged_gemm,
+                                     use_policy as up)
+    from repro.core.formats import FP32
+    rng = np.random.default_rng(1044)
+    T, d, f, E = 8, 8, 4, 2
+    x = jnp.asarray(rng.standard_normal((T, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((E, d, f)), jnp.float32)
+    sizes = jnp.asarray([5, 3], jnp.int32)
+    cfg = GemmConfig(FP32, AccumulatorSpec(ovf=8, msb=12, lsb=-60),
+                     "simulate")
+    with up(NumericsPolicy(cfg)):
+        got = np.asarray(ragged_gemm(x, w, sizes, site="t_ragged_fdp"))
+    ref = np.concatenate([
+        (np.asarray(x[:5], np.float64) @ np.asarray(w[0], np.float64)),
+        (np.asarray(x[5:], np.float64) @ np.asarray(w[1], np.float64)),
+    ]).astype(np.float32)
+    np.testing.assert_allclose(got, ref, rtol=1e-6, atol=1e-6)
+    # padding rows (beyond sum(group_sizes)) belong to no group: the FDP
+    # path must zero them exactly like the native ragged_dot path, so a
+    # plan flipping a site between backends never changes padded rows
+    short = jnp.asarray([3, 2], jnp.int32)                  # 3 padded rows
+    with up(NumericsPolicy(cfg)):
+        got_pad = np.asarray(ragged_gemm(x, w, short, site="t_ragged_pad"))
+    np.testing.assert_array_equal(got_pad[5:], np.zeros((3, f), np.float32))
+    np.testing.assert_allclose(
+        got_pad[:3],
+        (np.asarray(x[:3], np.float64) @ np.asarray(w[0], np.float64)
+         ).astype(np.float32), rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# persistence: save -> load round trip (the decoupling of calibration from
+# search iterations)
+# ---------------------------------------------------------------------------
+
+def _traced(seed, site="t_save"):
+    a, b = _operands(seed)
+    with calibrate() as tr, use_policy(MXU_FP32):
+        gemm(a, b, site=site)
+        gemm(a, b, site=site)
+    return tr
+
+
+def test_trace_save_load_round_trip(tmp_path):
+    from repro.numerics import config_fingerprint, load_trace
+    tr = _traced(20)
+    fp = config_fingerprint({"model": "t", "batch": 2})
+    path = tmp_path / "t.trace.json"
+    tr.save(path, fingerprint=fp, meta={"arch": "t"})
+    back = load_trace(path, expect_fingerprint=fp)
+    p0, p1 = tr.profile("t_save"), back.profile("t_save")
+    # per-site stats preserved exactly
+    assert p1.calls == p0.calls and p1.macs == p0.macs
+    assert p1.shapes == p0.shapes and p1.max_k == p0.max_k
+    assert p1.cfg_tags == p0.cfg_tags
+    for attr in ("a_abs_max", "a_abs_min_nz", "b_abs_max", "b_abs_min_nz",
+                 "out_abs_max", "out_abs_min_nz"):
+        assert getattr(p1, attr) == getattr(p0, attr), attr
+    assert p1.msb_required == p0.msb_required
+    assert p1.exact_spec() == p0.exact_spec()
+    # operand samples preserved bit-for-bit with dtype and shape
+    assert p1.sample_a.dtype == p0.sample_a.dtype == np.float32
+    assert p1.sample_a.shape == p0.sample_a.shape
+    np.testing.assert_array_equal(p1.sample_a, p0.sample_a)
+    np.testing.assert_array_equal(p1.sample_b, p0.sample_b)
+    assert back.fingerprint == fp and back.meta == {"arch": "t"}
+    # load -> save with no arguments must not strip provenance
+    path2 = tmp_path / "t2.trace.json"
+    back.save(path2)
+    again = load_trace(path2, expect_fingerprint=fp)
+    assert again.fingerprint == fp and again.meta == {"arch": "t"}
+
+
+def test_trace_load_searchable(tmp_path):
+    """A reloaded trace drives the search exactly like the live one."""
+    from repro.numerics import load_trace
+    from repro.numerics.search import evaluate_candidates
+    from repro.numerics.candidates import enumerate_candidates
+    tr = _traced(21)
+    tr.save(tmp_path / "t.trace.json")
+    back = load_trace(tmp_path / "t.trace.json")
+    prof_live, prof_back = tr.profile("t_save"), back.profile("t_save")
+    cands = enumerate_candidates(prof_live, widths=(32,))
+    live = evaluate_candidates(prof_live, cands)
+    reload_ = evaluate_candidates(prof_back, cands)
+    for e0, e1 in zip(live, reload_):
+        assert e0.error_bits == e1.error_bits
+        assert e0.energy_j == e1.energy_j
+
+
+def test_trace_load_rejects_mismatched_fingerprint(tmp_path):
+    import pytest
+    from repro.numerics import load_trace
+    tr = _traced(22)
+    path = tmp_path / "t.trace.json"
+    tr.save(path, fingerprint="aaaa")
+    with pytest.raises(ValueError, match="fingerprint.*recalibrate"):
+        load_trace(path, expect_fingerprint="bbbb")
+    # no expectation -> loads fine
+    assert load_trace(path).fingerprint == "aaaa"
+
+
+def test_trace_load_rejects_newer_schema(tmp_path):
+    import json
+    import pytest
+    from repro.numerics import TRACE_VERSION, load_trace
+    tr = _traced(23)
+    path = tmp_path / "t.trace.json"
+    tr.save(path)
+    doc = json.loads(path.read_text())
+    doc["version"] = TRACE_VERSION + 1
+    path.write_text(json.dumps(doc))
+    with pytest.raises(ValueError, match="newer"):
+        load_trace(path)
+
+
+def test_trace_load_rejects_non_trace_document(tmp_path):
+    import pytest
+    from repro.numerics import load_trace
+    path = tmp_path / "not_a_trace.json"
+    path.write_text('{"version": 1, "name": "x", "sites": []}')
+    with pytest.raises(ValueError, match="not a CalibrationTrace"):
+        load_trace(path)

@@ -1,0 +1,140 @@
+"""The plan zoo: every checked-in PrecisionPlan loads, round-trips through
+``policy_from_plan``, agrees with its MANIFEST entry, and the plan-aware
+continuous-batching warmup compiles decode under a plan exactly once."""
+
+import glob
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core.dispatch import policy_from_plan
+from repro.launch.batching import ContinuousBatcher, Request
+from repro.models import init
+from repro.numerics import PLAN_VERSION, load_plan, load_trace
+
+PLANS_DIR = os.path.join(os.path.dirname(__file__), os.pardir,
+                         "examples", "plans")
+PLAN_PATHS = sorted(p for p in glob.glob(os.path.join(PLANS_DIR, "*.json"))
+                    if os.path.basename(p) != "MANIFEST.json")
+MANIFEST_PATH = os.path.join(PLANS_DIR, "MANIFEST.json")
+
+
+def _manifest():
+    with open(MANIFEST_PATH) as f:
+        return json.load(f)
+
+
+def test_zoo_has_coverage():
+    """≥4 per-architecture plans, with at least one MoE and one SSM — the
+    paper's tailoring claim demonstrated beyond a single dense model."""
+    assert len(PLAN_PATHS) >= 4, PLAN_PATHS
+    families = {e["family"] for e in _manifest()["plans"].values()}
+    assert "moe" in families and "ssm" in families, families
+
+
+@pytest.mark.parametrize("path", PLAN_PATHS,
+                         ids=[os.path.basename(p) for p in PLAN_PATHS])
+def test_plan_loads_and_round_trips(path):
+    plan = load_plan(path)
+    assert plan.version <= PLAN_VERSION
+    assert plan.sites, f"{path} has no sites"
+    policy = policy_from_plan(path)
+    for s in plan.sites:
+        assert policy.lookup(s.site).tag() == s.cfg.tag()
+    assert policy.lookup("__unlisted__").tag() == plan.default.tag()
+
+
+@pytest.mark.parametrize("path", PLAN_PATHS,
+                         ids=[os.path.basename(p) for p in PLAN_PATHS])
+def test_manifest_in_sync(path):
+    arch_id = os.path.basename(path)[:-len(".json")]
+    plan = load_plan(path)
+    entry = _manifest()["plans"].get(arch_id)
+    assert entry is not None, f"{arch_id} missing from MANIFEST.json"
+    assert entry["sites"] == [s.site for s in plan.sites]
+    assert entry["budget_bits"] == plan.budget_bits
+    assert entry["validated_bits"] == plan.meta.get("validated_bits")
+    assert entry["modeled_energy_j"] == plan.meta.get("modeled_energy_j")
+    # every plan must beat (or at worst match) the uniform-91-bit baseline
+    assert entry["energy_vs_baseline"] is not None
+    assert entry["energy_vs_baseline"] <= 1.0
+
+
+def test_manifest_lists_only_existing_files():
+    on_disk = {os.path.basename(p)[:-len(".json")] for p in PLAN_PATHS}
+    assert set(_manifest()["plans"]) == on_disk
+
+
+@pytest.mark.parametrize("arch_id", ["dbrx_132b", "mamba2_1p3b"])
+def test_zoo_traces_reload_with_expert_and_scan_sites(arch_id):
+    """The checked-in calibration traces carry the sites the ROADMAP asked
+    for: MoE router + expert sites, SSM scan-block sites."""
+    path = os.path.join(PLANS_DIR, "traces", f"{arch_id}.trace.json")
+    trace = load_trace(path)
+    sites = set(trace.sites())
+    if arch_id == "dbrx_132b":
+        assert {"moe_router", "moe_in", "moe_gate", "moe_out"} <= sites
+    else:
+        assert any(s.startswith("ssm_") for s in sites), sites
+    for s in sites:
+        assert trace.profile(s).sample is not None, (arch_id, s)
+
+
+# ---------------------------------------------------------------------------
+# plan-aware continuous-batching warmup (the ROADMAP "batching under plans"
+# bug): warmed-up decode under a plan must compile exactly once — stepping
+# never retraces — and produce the same tokens as a cold engine stepping
+# under the same policy.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def qwen_reduced():
+    cfg = get_config("qwen3-0.6b").reduced()
+    return cfg, init(cfg, jax.random.key(0))
+
+
+def _drive(eng, n=2, max_new=3):
+    reqs = [Request(uid=i, prompt=[3, 1, 4, 1], max_new=max_new)
+            for i in range(n)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return [r.out for r in reqs]
+
+
+def test_warmup_under_plan_does_not_recompile(qwen_reduced):
+    cfg, params = qwen_reduced
+    plan_path = os.path.join(PLANS_DIR, "paper_mlp.json")
+    eng = ContinuousBatcher(cfg, params, n_slots=2, max_len=32,
+                            warmup=plan_path)
+    assert eng.policy is not None and eng.policy.name.startswith("plan:")
+    assert eng.trace_count == 1, "warmup should trace the decode step once"
+    outs = _drive(eng)
+    assert eng.trace_count == 1, \
+        f"plan-served decode retraced after warmup ({eng.trace_count} traces)"
+    assert all(len(o) == 3 for o in outs)
+
+    # parity: a cold engine stepping under the same policy decodes the same
+    cold = ContinuousBatcher(cfg, params, n_slots=2, max_len=32,
+                             policy=policy_from_plan(plan_path))
+    assert cold.trace_count == 0
+    outs_cold = _drive(cold)
+    assert outs == outs_cold
+    assert cold.trace_count == 1
+
+
+def test_warmup_accepts_policy_objects(qwen_reduced):
+    cfg, params = qwen_reduced
+    plan = load_plan(os.path.join(PLANS_DIR, "paper_mlp.json"))
+    for arg in (plan, plan.to_policy()):
+        eng = ContinuousBatcher(cfg, params, n_slots=1, max_len=16,
+                                warmup=arg)
+        assert eng.trace_count == 1
+        assert eng.numerics_info()["policy"] == f"plan:{plan.name}"
+    with pytest.raises(TypeError):
+        ContinuousBatcher(cfg, params, n_slots=1, max_len=16, warmup=123)
