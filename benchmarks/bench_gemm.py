@@ -5,8 +5,11 @@ report the generator's datapath model (limbs, int-ops/MAC, modeled pJ/MAC,
 modeled FPGA watts) which is the basis of the Fig. 2/3 energy axes, and the
 MXU-native baseline for the same shapes.
 
-Two sections:
-  * the classic per-shape table (native / simulate / pallas targets), and
+Three sections:
+  * the classic per-shape table (native / simulate / pallas targets),
+  * **grad rows**: ``value_and_grad`` over a dispatched GEMM per mode (one
+    forward + the two phase-dispatched backward GEMMs through the custom_vjp
+    layer) so the regression gate covers gradient-dispatch overhead, and
   * the **hot-path section**: a GemmPlan sweep of the vectorized Pallas
     engine at (M,N,K) = (256, 256, 1024), measured against the seed per-k
     scalar-loop kernel (kept as ``impl="loop"``) with a bit-exactness check —
@@ -31,6 +34,12 @@ from repro.core import (AccumulatorSpec, FP32, GemmPlan, generate_gemm,
                         plan_gemm)
 from repro.core.energy import FREQ_HZ, gemm_power
 from repro.kernels import ops as kops
+
+# Grad rows: value_and_grad over one dispatched GEMM per execution mode —
+# one forward plus the two phase-dispatched backward GEMMs (dA = G·Bᵀ,
+# dB = Aᵀ·G), i.e. the training hot path through the custom_vjp dispatch.
+GRAD_SHAPES = [(64, 256, 64)]
+QUICK_GRAD_SHAPES = [(32, 128, 32)]
 
 SHAPES = [(64, 256, 64), (128, 512, 128)]
 QUICK_SHAPES = [(32, 128, 32)]
@@ -128,6 +137,44 @@ def run_table(shapes=SHAPES, specs=SPECS):
     assert same
 
 
+def run_grad_rows(shapes=GRAD_SHAPES):
+    """Backward-pass dispatch rows: ``value_and_grad`` over one dispatched
+    GEMM per mode, so the regression gate covers the custom_vjp gradient
+    dispatch overhead (policy lookup + two bwd-site GEMMs), not just the
+    forward kernels. The ``gflops`` figure counts all three GEMMs."""
+    from repro.core.dispatch import (FDP91, MXU_FP32, GemmConfig,
+                                     NumericsPolicy, gemm, use_policy)
+
+    spec = AccumulatorSpec.paper_91bit()
+    policies = [
+        ("native_f32", MXU_FP32, None),
+        ("simulate_w91", FDP91, spec),
+        ("pallas_w91",
+         NumericsPolicy(GemmConfig(FP32, spec, "pallas"), name="pallas91"),
+         spec),
+    ]
+    rng = np.random.default_rng(3)
+    for (M, K, N) in shapes:
+        a = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+        flops = 3 * 2 * M * K * N              # fwd + dA + dB
+        for tag, policy, acc in policies:
+            def loss(x, y):
+                return gemm(x, y, site="bench_grad").sum()
+
+            with use_policy(policy):
+                vg = jax.jit(jax.value_and_grad(loss, argnums=(0, 1)))
+                s = timeit(lambda: vg(a, b)[1][0])
+            emit(f"gemm_grad_{tag}_{M}x{K}x{N}", s,
+                 f"GFLOPs={flops/s/1e9:.3f}|fwd+dA+dB",
+                 shape=(M, K, N), spec=acc, impl=f"grad_{tag.split('_')[0]}")
+            # emit() assumes one GEMM per call; a grad call runs three
+            # (fwd + dA + dB), so both derived figures scale by 3
+            ROWS[-1]["gflops"] = flops / s / 1e9
+            if "modeled" in ROWS[-1]:
+                ROWS[-1]["modeled"]["energy_j_per_call"] *= 3
+
+
 def run_native_anchors(shapes=QUICK_NATIVE_ANCHORS):
     """Native-only rows for the regression gate's machine-speed anchor."""
     rng = np.random.default_rng(2)
@@ -220,9 +267,11 @@ def run(quick: bool = False, json_path: str | None = None):
     t0 = time.time()
     if quick:
         run_table(shapes=QUICK_SHAPES, specs=[SPECS[0]])
+        run_grad_rows(shapes=QUICK_GRAD_SHAPES)
         run_native_anchors()
     else:
         run_table()
+        run_grad_rows()
         run_hotpath()
     if json_path:
         doc = {

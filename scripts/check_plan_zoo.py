@@ -5,13 +5,21 @@ For every ``examples/plans/*.json`` (except MANIFEST.json) this
 
   1. loads the plan and round-trips it through ``policy_from_plan`` (the
      exact entry point the launch drivers use), checking every site's
-     assignment survives the JSON -> NumericsPolicy path,
+     assignment survives the JSON -> NumericsPolicy path — including that
+     every site key parses as a valid ``GemmSite`` (phase-qualified
+     ``name@bwd.dA`` keys included) and that the backward-namespace fallback
+     (``bwd_default`` -> ``*@bwd`` override) deploys,
   2. cross-checks the MANIFEST entry (file listed, site list and energy
      bookkeeping in sync with the plan document),
   3. dry-runs the plan's own architecture through the serving driver with
      ``--precision-plan`` on the reduced config — a real forward + decode
      under the plan's numerics, so a plan whose formats/accumulators no
      longer load, dispatch, or produce tokens fails the lane.
+
+It also asserts the v1 -> v2 loader migration on the checked-in v1 fixture
+(``examples/plans/fixtures/paper_mlp.v1.json``): plain-name assignments stay
+forward-only, the synthesized widened ``bwd_default`` round-trips, and saving
+the migrated plan re-loads identically.
 
     PYTHONPATH=src python scripts/check_plan_zoo.py
     PYTHONPATH=src python scripts/check_plan_zoo.py --no-serve   # fast half
@@ -31,7 +39,7 @@ PLANS_DIR = os.path.join(os.path.dirname(__file__), os.pardir,
 
 
 def check_plan(path: str, manifest: dict, serve: bool = True) -> list:
-    from repro.core.dispatch import policy_from_plan
+    from repro.core.dispatch import GemmSite, policy_from_plan
     from repro.numerics import PLAN_VERSION, load_plan
 
     errors = []
@@ -42,6 +50,19 @@ def check_plan(path: str, manifest: dict, serve: bool = True) -> list:
     if not plan.sites:
         errors.append("plan has no sites")
 
+    # 0. every site key must be a well-formed (possibly phase-qualified)
+    # GemmSite string — a typo'd phase/operand must fail the lane, not get
+    # silently treated as an unmatched pattern at serve time
+    for s in plan.sites:
+        try:
+            site = GemmSite.parse(s.site)
+        except ValueError as e:
+            errors.append(f"site key {s.site!r} does not parse: {e}")
+            continue
+        if site.key != s.site:
+            errors.append(f"site key {s.site!r} is not canonical "
+                          f"(expected {site.key!r})")
+
     # 1. policy round-trip through the deployment entry point
     policy = policy_from_plan(path)
     for s in plan.sites:
@@ -51,6 +72,12 @@ def check_plan(path: str, manifest: dict, serve: bool = True) -> list:
                           f"{s.cfg.tag()!r}")
     if policy.lookup("__unlisted__").tag() != plan.default.tag():
         errors.append("default config lost in policy round-trip")
+    # unassigned bwd sites must fall to the widened bwd_default (which every
+    # loaded plan has: v2 carries it, v1 synthesizes it in migration)
+    if plan.bwd_default is None:
+        errors.append("loaded plan has no bwd_default (migration broken?)")
+    elif policy.lookup("__unlisted__@bwd.dA").tag() != plan.bwd_default.tag():
+        errors.append("bwd_default not deployed as the *@bwd fallback")
 
     # 2. MANIFEST consistency
     entry = manifest.get("plans", {}).get(arch_id)
@@ -76,6 +103,49 @@ def check_plan(path: str, manifest: dict, serve: bool = True) -> list:
                             "--gen", "2", "--precision-plan", path])
         except Exception as e:
             errors.append(f"serve dry-run crashed: {type(e).__name__}: {e}")
+    return errors
+
+
+def check_v1_migration(fixture_path: str) -> list:
+    """The v1 -> v2 loader migration, asserted on a frozen v1 document."""
+    import json as _json
+
+    from repro.numerics import PLAN_VERSION, PrecisionPlan, load_plan
+    from repro.core.dispatch import widen_config
+
+    errors = []
+    if not os.path.exists(fixture_path):
+        return [f"missing v1 fixture {fixture_path}"]
+    with open(fixture_path) as f:
+        raw = _json.load(f)
+    if int(raw.get("version", 0)) != 1:
+        return [f"{fixture_path} is not a v1 document "
+                f"(version={raw.get('version')!r}) — the migration gate "
+                "needs a real v1 input; do not regenerate this fixture"]
+    plan = load_plan(fixture_path)
+    if plan.version != PLAN_VERSION:
+        errors.append(f"migrated plan reports version {plan.version}")
+    if plan.meta.get("migrated_from") != 1:
+        errors.append("migration provenance (meta.migrated_from) missing")
+    want_bwd = widen_config(plan.default)
+    if plan.bwd_default is None or plan.bwd_default.tag() != want_bwd.tag():
+        errors.append(f"v1 bwd_default should widen to {want_bwd.tag()!r}, "
+                      f"got {plan.bwd_default and plan.bwd_default.tag()!r}")
+    pol = plan.to_policy()
+    for s in plan.sites:
+        # v1 plain-name assignments are forward-only: the bwd twin of every
+        # assigned site must fall to the widened default, never inherit
+        if pol.lookup(s.site).tag() != s.cfg.tag():
+            errors.append(f"fwd lookup changed for {s.site}")
+        if pol.lookup(f"{s.site}@bwd.dB").tag() != want_bwd.tag():
+            errors.append(f"{s.site}@bwd.dB inherited the fwd assignment")
+    # save -> load round-trip of the migrated plan is stable (writes v2)
+    reloaded = PrecisionPlan.from_json(plan.to_json())
+    if {s.site: s.cfg.tag() for s in reloaded.sites} != \
+            {s.site: s.cfg.tag() for s in plan.sites}:
+        errors.append("migrated plan round-trip changed site assignments")
+    if reloaded.bwd_default.tag() != plan.bwd_default.tag():
+        errors.append("migrated plan round-trip lost bwd_default")
     return errors
 
 
@@ -113,6 +183,17 @@ def main(argv=None):
                 print(f"    - {e}")
         else:
             print(f"[plan-zoo] {name}: OK")
+
+    fixture = os.path.join(args.plans, "fixtures", "paper_mlp.v1.json")
+    errors = check_v1_migration(fixture)
+    if errors:
+        failures += 1
+        print("[plan-zoo] v1->v2 migration: FAIL")
+        for e in errors:
+            print(f"    - {e}")
+    else:
+        print("[plan-zoo] v1->v2 migration: OK "
+              "(fwd-only assignments, widened bwd fallback, round-trip)")
 
     if failures:
         print(f"[plan-zoo] FAIL: {failures} problem(s)")

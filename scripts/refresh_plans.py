@@ -18,10 +18,17 @@ tailors the whole zoo. Per architecture it
      summarizing modeled-energy savings and validated bits per arch — the
      artifacts the CI ``plan-zoo`` lane guards.
 
+``--phases fwd,bwd`` additionally calibrates through a ``value_and_grad``
+training-loss step, so every gradient GEMM is traced and searched under its
+own phase-qualified site (``attn_qk@bwd.dA``) and the emitted v2 plan carries
+backward assignments plus a modeled fwd/bwd energy split in the MANIFEST.
+
 Usage:
     PYTHONPATH=src python scripts/refresh_plans.py --reduced            # all
     PYTHONPATH=src python scripts/refresh_plans.py --only dbrx_132b --reduced
     PYTHONPATH=src python scripts/refresh_plans.py --reduced --jobs 3
+    PYTHONPATH=src python scripts/refresh_plans.py --only paper_mlp --reduced \
+        --phases fwd,bwd     # gradient sites get their own assignments
     PYTHONPATH=src python scripts/refresh_plans.py --only paper_mlp --reduced \
         --check     # recompute from the saved trace, compare to checked-in
 """
@@ -55,18 +62,24 @@ def _alias_of(arch_id: str) -> str:
     return arch_id
 
 
-def _calibration_spec(cfg, reduced: bool) -> dict:
-    """Everything the trace depends on — hashed into the fingerprint."""
+def _calibration_spec(cfg, reduced: bool, phases: tuple) -> dict:
+    """Everything the trace depends on — hashed into the fingerprint.
+    ``phases`` joins the spec only when the backward namespace is calibrated,
+    so every pre-phase (fwd-only) trace keeps its original fingerprint and
+    the checked-in zoo stays reproducible without a recalibration sweep."""
     import dataclasses
-    return {"config": dataclasses.asdict(cfg), "reduced": reduced,
+    spec = {"config": dataclasses.asdict(cfg), "reduced": reduced,
             "batch": CAL_BATCH, "seq": CAL_SEQ, "seed": CAL_SEED,
             "calibration_policy": "mxu_fp32"}
+    if "bwd" in phases:
+        spec["phases"] = sorted(phases)
+    return spec
 
 
-def _calibration_batch(cfg, key):
+def _calibration_batch(cfg, key, *, with_targets: bool = False):
     import jax
     import jax.numpy as jnp
-    ks = jax.random.split(key, 3)
+    ks = jax.random.split(key, 4)
     batch = {"tokens": jax.random.randint(
         ks[0], (CAL_BATCH, CAL_SEQ), 0, cfg.vocab_size)}
     if cfg.family == "vlm":
@@ -75,6 +88,12 @@ def _calibration_batch(cfg, key):
     if cfg.family == "encdec":
         batch["frames"] = 0.5 * jax.random.normal(
             ks[2], (CAL_BATCH, cfg.enc_seq, cfg.d_model), jnp.float32)
+    if with_targets:
+        # the bwd calibration step runs the real training loss, so gradient
+        # sites see CE-shaped cotangents rather than synthetic ones
+        batch["targets"] = jax.random.randint(
+            ks[3], (CAL_BATCH, CAL_SEQ), 0, cfg.vocab_size)
+        batch["loss_mask"] = jnp.ones((CAL_BATCH, CAL_SEQ), jnp.float32)
     return batch
 
 
@@ -92,10 +111,11 @@ def refresh_arch(arch_id: str, args) -> dict:
                                 load_trace, search)
 
     t0 = time.time()
+    phases = tuple(args.phases.split(","))
     cfg = get_config(arch_id)
     if args.reduced:
         cfg = cfg.reduced()
-    fp = config_fingerprint(_calibration_spec(cfg, args.reduced))
+    fp = config_fingerprint(_calibration_spec(cfg, args.reduced, phases))
     traces_dir = os.path.join(args.out, "traces")
     os.makedirs(traces_dir, exist_ok=True)
     trace_path = os.path.join(traces_dir, f"{arch_id}.trace.json")
@@ -122,16 +142,29 @@ def refresh_arch(arch_id: str, args) -> dict:
             f"commit the trace before gating on it")
     if trace is None:
         print(f"[{arch_id}] calibrating {cfg.name} "
-              f"(batch={CAL_BATCH}, seq={CAL_SEQ})")
+              f"(batch={CAL_BATCH}, seq={CAL_SEQ}, phases={phases})")
         with calibrate() as trace, use_policy(MXU_FP32):
             jax.block_until_ready(
                 forward(params, cfg, batch, LOCAL, remat="none"))
+            if "bwd" in phases:
+                # a real value_and_grad step through the training loss: the
+                # dispatch custom_vjp fires every gradient GEMM under its
+                # phase-qualified site key, so the trace records the bwd
+                # namespace's own exponent ranges / cancellation / samples
+                from repro.train.loop import make_loss_fn
+                loss_fn = make_loss_fn(cfg, LOCAL, remat="none")
+                grad_batch = _calibration_batch(
+                    cfg, jax.random.key(CAL_SEED + 1), with_targets=True)
+                jax.block_until_ready(jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, grad_batch))
         trace.save(trace_path, fingerprint=fp,
                    meta={"arch": arch_id, "arch_alias": _alias_of(arch_id),
                          "config_name": cfg.name, "family": cfg.family,
-                         "reduced": args.reduced,
+                         "reduced": args.reduced, "phases": sorted(phases),
                          "batch": CAL_BATCH, "seq": CAL_SEQ})
-        print(f"[{arch_id}] trace saved to {trace_path}")
+        n_bwd = len(trace.sites("bwd"))
+        print(f"[{arch_id}] trace saved to {trace_path} "
+              f"({len(trace.sites('fwd'))} fwd / {n_bwd} bwd sites)")
 
     # end-to-end validation oracle: the paper's uniform 91-bit FDP policy
     with use_policy(FDP91):
@@ -145,11 +178,12 @@ def refresh_arch(arch_id: str, args) -> dict:
 
     grid = dict(widths=(32,)) if args.reduced else dict(widths=(24, 40, 64))
     res = search(trace, budget_bits=args.budget, name=cfg.name,
-                 validate=validate, **grid)
+                 validate=validate, phases=phases, **grid)
     plan = res.plan
     plan.meta.update({
         "arch": arch_id, "arch_alias": _alias_of(arch_id),
         "family": cfg.family, "reduced": args.reduced,
+        "phases": sorted(phases),
         "fingerprint": fp,
         "trace": os.path.join("traces", f"{arch_id}.trace.json"),
     })
@@ -181,12 +215,18 @@ def manifest_entry(arch_id: str, plan) -> dict:
         "arch": m.get("arch_alias", arch_id),
         "family": m.get("family"),
         "reduced": m.get("reduced"),
+        "phases": m.get("phases", ["fwd"]),
         "budget_bits": plan.budget_bits,
         "validated_bits": m.get("validated_bits"),
         "modeled_energy_j": m.get("modeled_energy_j"),
+        # the measured fwd/bwd energy split (bwd is 0/absent for plans
+        # searched before the phase-aware namespaces existed)
+        "modeled_energy_fwd_j": m.get("modeled_energy_fwd_j"),
+        "modeled_energy_bwd_j": m.get("modeled_energy_bwd_j"),
         "baseline_energy_j": m.get("baseline_energy_j"),
         "energy_vs_baseline": m.get("energy_vs_baseline"),
         "n_sites": len(plan.sites),
+        "n_bwd_sites": sum(s.phase == "bwd" for s in plan.sites),
         "sites": [s.site for s in plan.sites],
         "fingerprint": m.get("fingerprint"),
         "trace": m.get("trace"),
@@ -218,7 +258,8 @@ def _spawn(arch_id: str, args) -> tuple:
     """Child process for --jobs fan-out (the calibration hook is process-
     global, so parallelism must be process-level, not threads)."""
     cmd = [sys.executable, os.path.abspath(__file__), "--only", arch_id,
-           "--budget", str(args.budget), "--out", args.out, "--no-manifest"]
+           "--budget", str(args.budget), "--out", args.out, "--no-manifest",
+           "--phases", args.phases]
     for flag in ("reduced", "recalibrate", "check"):
         if getattr(args, flag):
             cmd.append(f"--{flag}")
@@ -249,6 +290,11 @@ def main(argv=None):
                     help="skip archs whose plan file already exists")
     ap.add_argument("--recalibrate", action="store_true",
                     help="ignore saved traces, re-run calibration forwards")
+    ap.add_argument("--phases", default="fwd",
+                    help="comma list of site namespaces to calibrate+search: "
+                         "'fwd' (default, matches pre-phase traces) or "
+                         "'fwd,bwd' (adds a value_and_grad step so gradient "
+                         "GEMMs get their own traced, searched assignments)")
     ap.add_argument("--jobs", type=int, default=1,
                     help="process-parallel arch fan-out")
     ap.add_argument("--check", action="store_true",
@@ -259,6 +305,10 @@ def main(argv=None):
                     help="skip the MANIFEST rebuild (used by --jobs children)")
     args = ap.parse_args(argv)
     args.out = os.path.abspath(args.out)
+    bad = set(args.phases.split(",")) - {"fwd", "bwd"}
+    if bad:
+        raise SystemExit(f"--phases: unknown namespaces {sorted(bad)} "
+                         "(expected a comma list of fwd,bwd)")
 
     from repro.configs import ARCH_IDS
     archs = list(args.only) if args.only else list(ARCH_IDS)

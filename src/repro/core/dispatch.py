@@ -7,6 +7,16 @@ High-level model code never calls ``jnp.dot`` directly; it calls
 unmodified model can be re-run under any numerics without touching its code —
 the paper's "runtime execution flow".
 
+Site identity is structured: a ``GemmSite(name, phase, operand)`` names not
+just the call-site but the *computation stage* running through it. Model code
+keeps passing plain strings ("attn_qk" parses to the forward site); the
+dispatch entry points carry a ``jax.custom_vjp`` so the two backward GEMMs of
+every site (dL/dA = G·Bᵀ, dL/dB = Aᵀ·G) dispatch as first-class sites of
+their own — ``attn_qk@bwd.dA`` / ``attn_qk@bwd.dB`` — with their own policy
+lookup, tracing, and plan assignments. Gradients have very different dynamic
+range and cancellation behavior than forwards; phase-aware identity is what
+lets the tailoring search treat them that way.
+
 Modes:
     native   - MXU fast path: inputs cast to the format's dtype,
                jnp.dot(..., preferred_element_type=f32). Default everywhere;
@@ -16,6 +26,11 @@ Modes:
 
 Batched inputs (ndim > 2) are supported in all modes (simulate/pallas vmap
 over leading dims; native uses dot_general via jnp.matmul semantics).
+
+Autodiff support is *reverse-mode only*: the custom_vjp that makes backward
+GEMMs first-class sites has no defjvp, so ``jax.jvp``/``jacfwd`` through the
+dispatch entry points raise (forward-mode was never meaningful for the FDP
+modes anyway — their integer limb algebra has no useful tangents).
 """
 
 from __future__ import annotations
@@ -24,15 +39,113 @@ import contextlib
 import dataclasses
 import math
 import threading
-from typing import Optional
+from functools import partial
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .accumulator import SAFE_CHUNK, AccumulatorSpec
 from .formats import BF16, FP32, FloatFormat, PositFormat, get_format
 
 Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Structured site identity
+# ---------------------------------------------------------------------------
+PHASES = ("fwd", "bwd")
+OPERANDS = ("", "dA", "dB")
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmSite:
+    """Structured identity of one GEMM computation stage.
+
+    ``name`` is the model-level call-site ("attn_qk"), ``phase`` the autodiff
+    stage ("fwd" | "bwd") and ``operand`` which backward GEMM this is
+    ("dA" for the input/activation gradient G·Bᵀ, "dB" for the weight
+    gradient Aᵀ·G; empty for forward). The canonical string form is what
+    every registry (``sites_seen``, calibration traces, precision plans)
+    keys on:
+
+        fwd:  "attn_qk"
+        bwd:  "attn_qk@bwd.dA", "attn_qk@bwd.dB"
+    """
+
+    name: str
+    phase: str = "fwd"
+    operand: str = ""
+
+    def __post_init__(self):
+        if self.phase not in PHASES:
+            raise ValueError(f"bad site phase {self.phase!r}")
+        if self.operand not in OPERANDS:
+            raise ValueError(f"bad site operand {self.operand!r}")
+        if self.phase == "fwd" and self.operand:
+            raise ValueError("forward sites carry no operand tag")
+        if "@" in self.name or "." in self.name:
+            raise ValueError(f"site name {self.name!r} may not contain @ or .")
+
+    @property
+    def key(self) -> str:
+        """Canonical string key (forward sites stay plain names, so every
+        pre-existing string-keyed artifact reads unchanged)."""
+        if self.phase == "fwd":
+            return self.name
+        return (f"{self.name}@{self.phase}.{self.operand}"
+                if self.operand else f"{self.name}@{self.phase}")
+
+    def bwd(self, operand: str) -> "GemmSite":
+        return GemmSite(self.name, "bwd", operand)
+
+    @classmethod
+    def parse(cls, site: Union[str, "GemmSite"]) -> "GemmSite":
+        """String shim: model call-sites keep passing plain names."""
+        if isinstance(site, GemmSite):
+            return site
+        if "@" not in site:
+            return cls(site)
+        name, _, rest = site.partition("@")
+        phase, _, operand = rest.partition(".")
+        return cls(name, phase, operand)
+
+
+def _parse_pattern(pat: str) -> tuple:
+    """Pattern grammar ``NAME[@PHASE[.OPERAND]]``: NAME may end in ``*``
+    (prefix match, bare ``*`` matches everything); PHASE/OPERAND may be
+    ``*``. A pattern with no ``@`` is *forward-only* — exactly the v1
+    semantics, so pre-phase plans never silently capture gradient GEMMs."""
+    if "@" in pat:
+        name, _, rest = pat.partition("@")
+        phase, _, op = rest.partition(".")
+        return name, phase, (op or "*")
+    return pat, "fwd", "*"
+
+
+def _match_score(pat: str, site: GemmSite) -> Optional[int]:
+    """Specificity of a pattern against a site, or None on no match.
+    Exact name beats prefix wildcard; exact phase beats ``*``; exact operand
+    beats ``*`` — so ``attn_qk@bwd.dA`` > ``attn_qk@bwd`` > ``attn_*@bwd``
+    > ``*@bwd`` for a backward site, and forward lookups behave exactly as
+    the flat-string v1 dispatch did."""
+    name, phase, op = _parse_pattern(pat)
+    if name == site.name:
+        score = 8
+    elif name.endswith("*") and site.name.startswith(name[:-1]):
+        score = 2
+    else:
+        return None
+    if phase == site.phase:
+        score += 4
+    elif phase != "*":
+        return None
+    if op == site.operand:
+        score += 1
+    elif op != "*":
+        return None
+    return score
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,23 +166,39 @@ class GemmConfig:
         return f"{self.fmt.name}/{acc}/{self.mode}"
 
 
+def widen_config(cfg: GemmConfig) -> GemmConfig:
+    """The gradient-safe fallback for sites with no explicit bwd assignment:
+    full-precision inputs, and for FDP modes the paper's ⟨30,30,-30⟩ 91-bit
+    accumulator (overflow-free and effectively exact on any sane gradient
+    range). Backward GEMMs cancel harder and swing wider than their forward
+    twins, so an unassigned bwd site must *widen*, never inherit."""
+    if cfg.mode == "native":
+        return GemmConfig(FP32, None, "native")
+    return GemmConfig(FP32, AccumulatorSpec.paper_91bit(), cfg.mode)
+
+
 @dataclasses.dataclass(frozen=True)
 class NumericsPolicy:
     """Call-site -> GemmConfig mapping. ``default`` covers unlisted sites.
-    Site keys support trailing-* prefix matching ("attn_*")."""
+
+    Patterns are phase-aware (see ``_parse_pattern``): plain names and
+    trailing-``*`` prefixes match *forward* sites only; ``name@bwd``,
+    ``name@bwd.dA`` and the wildcard fallback ``*@bwd`` address backward
+    sites. The most specific matching pattern wins; ties go to the earliest
+    override (``with_override`` prepends)."""
 
     default: GemmConfig = GemmConfig()
     overrides: tuple = ()                      # tuple[(pattern, GemmConfig)]
     name: str = "default"
 
-    def lookup(self, site: str) -> GemmConfig:
+    def lookup(self, site: Union[str, GemmSite]) -> GemmConfig:
+        s = GemmSite.parse(site)
+        best, best_score = None, -1
         for pat, cfg in self.overrides:
-            if pat == site:
-                return cfg
-        for pat, cfg in self.overrides:
-            if pat.endswith("*") and site.startswith(pat[:-1]):
-                return cfg
-        return self.default
+            sc = _match_score(pat, s)
+            if sc is not None and sc > best_score:
+                best, best_score = cfg, sc
+        return best if best is not None else self.default
 
     def with_override(self, pattern: str, cfg: GemmConfig) -> "NumericsPolicy":
         return dataclasses.replace(
@@ -116,21 +245,45 @@ def use_policy(policy: NumericsPolicy):
             _state.policy = prev
 
 
+# ---------------------------------------------------------------------------
+# Site registry (introspection/report)
+# ---------------------------------------------------------------------------
+# Guarded by its own lock: sites are recorded at trace time from whatever
+# thread is staging the computation (the thread-pool serving tests trace
+# concurrently), and test fixtures reset it between cases so assertions
+# never depend on which test dispatched first.
 _SITES_SEEN: set = set()
+_SITES_LOCK = threading.Lock()
 
 
 def sites_seen() -> frozenset:
-    """All GEMM call-sites traced so far (introspection/report)."""
-    return frozenset(_SITES_SEEN)
+    """All GEMM call-site keys dispatched so far (canonical strings;
+    backward sites appear as ``name@bwd.dA`` / ``name@bwd.dB``)."""
+    with _SITES_LOCK:
+        return frozenset(_SITES_SEEN)
+
+
+def reset_sites_seen() -> None:
+    """Clear the process-global site registry (test isolation)."""
+    with _SITES_LOCK:
+        _SITES_SEEN.clear()
+
+
+def _note_site(key: str) -> None:
+    with _SITES_LOCK:
+        _SITES_SEEN.add(key)
 
 
 # ---------------------------------------------------------------------------
 # Calibration tracing hook (repro.numerics)
 # ---------------------------------------------------------------------------
 # When a hook is installed (see repro.numerics.trace.calibrate), every
-# dispatched GEMM reports (site, cfg, a, b, out) so the tailoring subsystem
-# can record per-site operand statistics. The hook runs at *trace* time, so
-# it may stage jnp ops / jax.debug.callback into the computation; it must be
+# dispatched GEMM reports (site_key, cfg, a, b, out) so the tailoring
+# subsystem can record per-site operand statistics. Backward GEMMs report
+# under their own phase-qualified keys, so a calibration run that includes a
+# ``value_and_grad`` step profiles gradient exponent ranges and cancellation
+# separately from the forward pass. The hook runs at *trace* time, so it may
+# stage jnp ops / jax.debug.callback into the computation; it must be
 # None-checked here to keep the production path zero-cost.
 _TRACE_HOOK = None
 
@@ -144,9 +297,9 @@ def set_trace_hook(hook):
     return prev
 
 
-def _maybe_trace(site, cfg, a, b, out):
+def _maybe_trace(site_key, cfg, a, b, out):
     if _TRACE_HOOK is not None:
-        _TRACE_HOOK(site, cfg, a, b, out)
+        _TRACE_HOOK(site_key, cfg, a, b, out)
     return out
 
 
@@ -262,8 +415,6 @@ def _measure_plan(m: int, n: int, k: int, *, fmt,
     """Time AUTOTUNE_CANDIDATES on random operands and return the winner."""
     import time
 
-    import numpy as np
-
     from repro.kernels import ops as kops
 
     rng = np.random.default_rng(0)
@@ -308,20 +459,18 @@ def _plan_for_operands(a: Array, b: Array, cfg: GemmConfig,
                      autotune=autotune)
 
 
-def gemm(a: Array, b: Array, *, site: str = "generic",
-         policy: Optional[NumericsPolicy] = None,
-         plan: Optional[GemmPlan] = None) -> Array:
-    """Policy-dispatched matmul. Contracts a's last dim with b's second-to-last
-    (jnp.matmul semantics). Output f32 (simulate/pallas) or f32/bf16 (native,
-    preferred_element_type=f32 then cast by caller if desired).
-
-    ``plan`` overrides the cached/heuristic block sizes (pallas mode only).
-    """
-    pol = policy or current_policy()
-    cfg = pol.lookup(site)
-    _SITES_SEEN.add(site)
+# ---------------------------------------------------------------------------
+# Dispatch core
+# ---------------------------------------------------------------------------
+def _dispatch(site: GemmSite, cfg: GemmConfig, a: Array, b: Array, *,
+              plan: Optional[GemmPlan] = None) -> Array:
+    """Run one matmul as one *site*: register the key, execute under the
+    resolved config, report to the calibration hook. Every entry point —
+    forward and backward — funnels through here so phase-qualified sites are
+    first-class everywhere (``sites_seen``, traces, plans)."""
+    _note_site(site.key)
     out = _execute(cfg, a, b, plan=plan)
-    return _maybe_trace(site, cfg, a, b, out)
+    return _maybe_trace(site.key, cfg, a, b, out)
 
 
 def _execute(cfg: GemmConfig, a: Array, b: Array, *,
@@ -351,8 +500,302 @@ def _execute(cfg: GemmConfig, a: Array, b: Array, *,
                             bm=plan.bm, bn=plan.bn, bk=plan.bk)
 
 
+def _unbroadcast(x: Array, shape: tuple) -> Array:
+    """Sum a cotangent down to a (numpy-broadcast) primal operand shape."""
+    shape = tuple(shape)
+    if x.shape == shape:
+        return x
+    extra = x.ndim - len(shape)
+    if extra:
+        x = jnp.sum(x, axis=tuple(range(extra)))
+    axes = tuple(i for i, (xs, ps) in enumerate(zip(x.shape, shape))
+                 if ps == 1 and xs != 1)
+    if axes:
+        x = jnp.sum(x, axis=axes, keepdims=True)
+    return x
+
+
+# -- gemm: policy-dispatched matmul with phase-aware gradient dispatch ------
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _gemm_vjp(ctx, a, b):
+    site, pol, plan = ctx
+    return _dispatch(site, pol.lookup(site), a, b, plan=plan)
+
+
+def _gemm_vjp_fwd(ctx, a, b):
+    return _gemm_vjp(ctx, a, b), (a, b)
+
+
+def _gemm_vjp_bwd(ctx, res, g):
+    """The two backward GEMMs of a site, dispatched as sites of their own:
+    dL/dA = G·Bᵀ under ``<site>@bwd.dA`` and dL/dB = Aᵀ·G under
+    ``<site>@bwd.dB``. The policy captured at the forward call resolves both
+    (deterministic: fwd and bwd of one computation always agree on the
+    policy, even if the ambient context changed between them)."""
+    site, pol, _plan = ctx
+    a, b = res
+    # jnp.matmul 1-D promotion: lift to 2-D, compute, drop the unit dims.
+    # Insert the N axis before the M axis so the 1-D x 1-D (vector dot)
+    # case — where g is 0-d — lifts cleanly to (1, 1).
+    a2 = a[None, :] if a.ndim == 1 else a
+    b2 = b[:, None] if b.ndim == 1 else b
+    g2 = g
+    if b.ndim == 1:
+        g2 = g2[..., None]
+    if a.ndim == 1:
+        g2 = g2[..., None, :]
+
+    da_site, db_site = site.bwd("dA"), site.bwd("dB")
+    da_cfg, db_cfg = pol.lookup(da_site), pol.lookup(db_site)
+
+    da = _dispatch(da_site, da_cfg, g2, jnp.swapaxes(b2, -1, -2))
+    da = _unbroadcast(da, a2.shape).reshape(a.shape).astype(a.dtype)
+
+    if b2.ndim == 2:
+        # weight gradient: one flattened Aᵀ·G GEMM over all leading dims
+        # (bit-matches the autodiff contraction order: row-major = batch-major)
+        af = a2.reshape(-1, a2.shape[-1])
+        gf = g2.reshape(-1, g2.shape[-1])
+        db = _dispatch(db_site, db_cfg, jnp.swapaxes(af, -1, -2), gf)
+    else:
+        db = _dispatch(db_site, db_cfg, jnp.swapaxes(a2, -1, -2), g2)
+        db = _unbroadcast(db, b2.shape)
+    db = db.reshape(b.shape).astype(b.dtype)
+    return da, db
+
+
+_gemm_vjp.defvjp(_gemm_vjp_fwd, _gemm_vjp_bwd)
+
+
+def gemm(a: Array, b: Array, *, site: Union[str, GemmSite] = "generic",
+         policy: Optional[NumericsPolicy] = None,
+         plan: Optional[GemmPlan] = None) -> Array:
+    """Policy-dispatched matmul. Contracts a's last dim with b's second-to-last
+    (jnp.matmul semantics). Output f32 (simulate/pallas) or f32/bf16 (native,
+    preferred_element_type=f32 then cast by caller if desired).
+
+    Differentiating through this call dispatches the two backward GEMMs as
+    ``<site>@bwd.dA`` / ``<site>@bwd.dB`` under the same policy (see
+    ``_gemm_vjp_bwd``). ``plan`` overrides the cached/heuristic block sizes
+    for the forward call (pallas mode only; backward calls resolve their own).
+    """
+    pol = policy or current_policy()
+    return _gemm_vjp((GemmSite.parse(site), pol, plan), a, b)
+
+
+# -- grouped attention einsums ----------------------------------------------
+def _grouped_qk_execute(site: GemmSite, cfg: GemmConfig,
+                        q: Array, k: Array) -> Array:
+    """q (B,Kh,G,Sq,hd) x k (B,Kh,Sk,hd) -> (B,Kh,G,Sq,Sk).
+
+    Native mode uses a real einsum so sequence-parallel sharding on Sq
+    survives (a reshape that merges (G, Sq) would force XLA to replicate the
+    sequence dim). Simulate/pallas modes run the flattened 2D dispatch."""
+    _note_site(site.key)
+    if cfg.mode == "native":
+        dt = cfg.fmt.jnp_dtype
+        out = jnp.einsum("bkgqd,bksd->bkgqs", q.astype(dt), k.astype(dt),
+                         preferred_element_type=jnp.float32)
+        if _TRACE_HOOK is not None:
+            # report in jnp.matmul shape so the profiler sees the real
+            # contraction: (B,Kh,G*Sq,hd) x (B,Kh,hd,Sk)
+            B_, Kh_, G_, Sq_, hd_ = q.shape
+            _maybe_trace(site.key, cfg, q.reshape(B_, Kh_, G_ * Sq_, hd_),
+                         jnp.swapaxes(k, -1, -2),
+                         out.reshape(B_, Kh_, G_ * Sq_, -1))
+        return out
+    B, Kh, G, Sq, hd = q.shape
+    qf = q.reshape(B, Kh, G * Sq, hd)
+    out = _dispatch(site, cfg, qf, jnp.swapaxes(k, -1, -2))
+    return out.reshape(B, Kh, G, Sq, k.shape[2])
+
+
+def _grouped_av_execute(site: GemmSite, cfg: GemmConfig,
+                        p: Array, v: Array) -> Array:
+    """p (B,Kh,G,Sq,Sk) x v (B,Kh,Sk,hd) -> (B,Kh,G,Sq,hd)."""
+    _note_site(site.key)
+    if cfg.mode == "native":
+        dt = cfg.fmt.jnp_dtype
+        out = jnp.einsum("bkgqs,bksd->bkgqd", p.astype(dt), v.astype(dt),
+                         preferred_element_type=jnp.float32)
+        if _TRACE_HOOK is not None:
+            B_, Kh_, G_, Sq_, Sk_ = p.shape
+            _maybe_trace(site.key, cfg, p.reshape(B_, Kh_, G_ * Sq_, Sk_), v,
+                         out.reshape(B_, Kh_, G_ * Sq_, -1))
+        return out
+    B, Kh, G, Sq, Sk = p.shape
+    pf = p.reshape(B, Kh, G * Sq, Sk)
+    out = _dispatch(site, cfg, pf, v)
+    return out.reshape(B, Kh, G, Sq, v.shape[-1])
+
+
+def _grouped_dright(site: GemmSite, cfg: GemmConfig,
+                    lhs: Array, rhs: Array) -> Array:
+    """The shared dK/dV backward contraction
+    ``bkgqx,bkgqy->bkxy`` (sum over heads-in-group and query positions) —
+    dK = dright(g, q), dV = dright(p, g)."""
+    _note_site(site.key)
+    if cfg.mode == "native":
+        dt = cfg.fmt.jnp_dtype
+        out = jnp.einsum("bkgqx,bkgqy->bkxy", lhs.astype(dt), rhs.astype(dt),
+                         preferred_element_type=jnp.float32)
+        if _TRACE_HOOK is not None:
+            B_, Kh_, G_, Sq_, X_ = lhs.shape
+            _maybe_trace(site.key, cfg,
+                         jnp.swapaxes(lhs.reshape(B_, Kh_, G_ * Sq_, X_),
+                                      -1, -2),
+                         rhs.reshape(B_, Kh_, G_ * Sq_, -1), out)
+        return out
+    B, Kh, G, Sq, X = lhs.shape
+    lf = jnp.swapaxes(lhs.reshape(B, Kh, G * Sq, X), -1, -2)
+    rf = rhs.reshape(B, Kh, G * Sq, -1)
+    return _dispatch(site, cfg, lf, rf)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _grouped_qk_vjp(ctx, q, k):
+    site, pol = ctx
+    return _grouped_qk_execute(site, pol.lookup(site), q, k)
+
+
+def _grouped_qk_vjp_fwd(ctx, q, k):
+    return _grouped_qk_vjp(ctx, q, k), (q, k)
+
+
+def _grouped_qk_vjp_bwd(ctx, res, g):
+    site, pol = ctx
+    q, k = res
+    dq_site, dk_site = site.bwd("dA"), site.bwd("dB")
+    # dQ = einsum("bkgqs,bksd->bkgqd", g, k) — the grouped_av contraction
+    dq = _grouped_av_execute(dq_site, pol.lookup(dq_site), g, k)
+    # dK = einsum("bkgqs,bkgqd->bksd", g, q)
+    dk = _grouped_dright(dk_site, pol.lookup(dk_site), g, q)
+    return dq.astype(q.dtype), dk.astype(k.dtype)
+
+
+_grouped_qk_vjp.defvjp(_grouped_qk_vjp_fwd, _grouped_qk_vjp_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _grouped_av_vjp(ctx, p, v):
+    site, pol = ctx
+    return _grouped_av_execute(site, pol.lookup(site), p, v)
+
+
+def _grouped_av_vjp_fwd(ctx, p, v):
+    return _grouped_av_vjp(ctx, p, v), (p, v)
+
+
+def _grouped_av_vjp_bwd(ctx, res, g):
+    site, pol = ctx
+    p, v = res
+    dp_site, dv_site = site.bwd("dA"), site.bwd("dB")
+    # dP = einsum("bkgqd,bksd->bkgqs", g, v) — the grouped_qk contraction
+    dp = _grouped_qk_execute(dp_site, pol.lookup(dp_site), g, v)
+    # dV = einsum("bkgqs,bkgqd->bksd", p, g)
+    dv = _grouped_dright(dv_site, pol.lookup(dv_site), p, g)
+    return dp.astype(p.dtype), dv.astype(v.dtype)
+
+
+_grouped_av_vjp.defvjp(_grouped_av_vjp_fwd, _grouped_av_vjp_bwd)
+
+
+def grouped_qk(q: Array, k: Array, *, site: Union[str, GemmSite] = "attn_qk",
+               policy: Optional[NumericsPolicy] = None) -> Array:
+    """GQA score einsum  q (B,Kh,G,Sq,hd) x k (B,Kh,Sk,hd) -> (B,Kh,G,Sq,Sk).
+    Backward dispatches ``<site>@bwd.dA`` (dQ) / ``<site>@bwd.dB`` (dK)."""
+    pol = policy or current_policy()
+    return _grouped_qk_vjp((GemmSite.parse(site), pol), q, k)
+
+
+def grouped_av(p: Array, v: Array, *, site: Union[str, GemmSite] = "attn_av",
+               policy: Optional[NumericsPolicy] = None) -> Array:
+    """GQA value einsum  p (B,Kh,G,Sq,Sk) x v (B,Kh,Sk,hd) -> (B,Kh,G,Sq,hd).
+    Backward dispatches ``<site>@bwd.dA`` (dP) / ``<site>@bwd.dB`` (dV)."""
+    pol = policy or current_policy()
+    return _grouped_av_vjp((GemmSite.parse(site), pol), p, v)
+
+
+# -- grouped (expert) GEMM --------------------------------------------------
+def _segment_ids(group_sizes: Array, n_rows: int) -> Array:
+    """Segment id per sorted row from the group-size prefix sums; rows beyond
+    sum(group_sizes) get id E (no group)."""
+    bounds = jnp.cumsum(group_sizes)
+    return jnp.sum(jnp.arange(n_rows)[:, None] >= bounds[None, :], axis=1)
+
+
+def _ragged_execute(site: GemmSite, cfg: GemmConfig, x: Array, w: Array,
+                    group_sizes: Array) -> Array:
+    """The mode switch of ``ragged_gemm`` (shared by fwd and the dx backward,
+    which is the same ragged contraction against transposed weights)."""
+    _note_site(site.key)
+    E, d, f = w.shape
+    if cfg.mode == "native":
+        dt = cfg.fmt.jnp_dtype
+        out = jax.lax.ragged_dot(x.astype(dt), w.astype(dt), group_sizes,
+                                 preferred_element_type=jnp.float32)
+    else:
+        seg = _segment_ids(group_sizes, x.shape[0])              # (T,)
+        per_expert = jax.vmap(lambda we: _execute(cfg, x, we))(w)  # (E,T,f)
+        out = jnp.take_along_axis(
+            per_expert, jnp.minimum(seg, E - 1)[None, :, None], axis=0)[0]
+        # rows beyond sum(group_sizes) (padding) belong to no group: zero
+        # them like the native ragged_dot path, so flipping a site between
+        # native and FDP candidates never changes padded-row outputs
+        out = jnp.where((seg < E)[:, None], out, 0.0)
+    # report as one (T, d) x (d, f) call: k/m from x, n and weight stats from
+    # the flattened expert stack (the sample decoder reshapes (-1, d, f) and
+    # keeps group 0's block)
+    return _maybe_trace(site.key, cfg, x, w.reshape(E * d, f), out)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _ragged_vjp(ctx, x, w, group_sizes):
+    site, pol = ctx
+    return _ragged_execute(site, pol.lookup(site), x, w, group_sizes)
+
+
+def _ragged_vjp_fwd(ctx, x, w, group_sizes):
+    return _ragged_vjp(ctx, x, w, group_sizes), (x, w, group_sizes)
+
+
+def _ragged_vjp_bwd(ctx, res, g):
+    site, pol = ctx
+    x, w, group_sizes = res
+    E, d, f = w.shape
+    dx_site, dw_site = site.bwd("dA"), site.bwd("dB")
+    # dX: the same ragged contraction against transposed per-expert weights
+    # (row t of g against w[seg(t)]ᵀ) — a first-class ragged site.
+    dx = _ragged_execute(dx_site, pol.lookup(dx_site), g,
+                         jnp.swapaxes(w, -1, -2), group_sizes)
+    # dW[e] = X_eᵀ · G_e: per-expert masked Aᵀ·G GEMMs (reference semantics,
+    # T×E work like the non-native forward path — every expert's weight
+    # gradient goes through the bwd site's exact datapath). This is NOT an
+    # asymptotic regression over autodiff even for native configs: JAX's own
+    # ragged_dot transpose lowers to an E-batched dot_general contracting
+    # the full token dim (E·T·d·f MACs, verified on the jaxpr) — a true
+    # O(T·d·f) wgrad needs the sorted-segment kernel the ROADMAP calls for.
+    dw_cfg = pol.lookup(dw_site)
+    _note_site(dw_site.key)
+    seg = _segment_ids(group_sizes, x.shape[0])
+    masks = seg[None, :] == jnp.arange(E)[:, None]               # (E, T)
+
+    def per_expert(m):
+        xm = jnp.where(m[:, None], x, jnp.zeros((), x.dtype))
+        return _execute(dw_cfg, jnp.swapaxes(xm, -1, -2), g)     # (d, f)
+
+    dw = jax.vmap(per_expert)(masks)                             # (E, d, f)
+    _maybe_trace(dw_site.key, dw_cfg, jnp.swapaxes(x, -1, -2), g,
+                 dw.reshape(E * d, f))
+    zeros_gs = np.zeros(group_sizes.shape, dtype=jax.dtypes.float0)
+    return dx.astype(x.dtype), dw.astype(w.dtype), zeros_gs
+
+
+_ragged_vjp.defvjp(_ragged_vjp_fwd, _ragged_vjp_bwd)
+
+
 def ragged_gemm(x: Array, w: Array, group_sizes: Array, *,
-                site: str = "moe_expert",
+                site: Union[str, GemmSite] = "moe_expert",
                 policy: Optional[NumericsPolicy] = None) -> Array:
     """Grouped (expert) GEMM: ``x (T, d)`` rows sorted by group, ``w (E, d, f)``
     per-group weights, ``group_sizes (E,)`` rows per group. Output ``(T, f)``
@@ -368,31 +811,12 @@ def ragged_gemm(x: Array, w: Array, group_sizes: Array, *,
 
     Tracing reports one aggregate call: operand stats over all tokens and all
     group weights, MACs = T·d·f (each sorted row hits exactly one expert).
+    Backward dispatches ``<site>@bwd.dA`` (token grads, a ragged contraction
+    against transposed weights) and ``<site>@bwd.dB`` (per-expert weight
+    grads) as their own sites.
     """
     pol = policy or current_policy()
-    cfg = pol.lookup(site)
-    _SITES_SEEN.add(site)
-    E, d, f = w.shape
-    if cfg.mode == "native":
-        dt = cfg.fmt.jnp_dtype
-        out = jax.lax.ragged_dot(x.astype(dt), w.astype(dt), group_sizes,
-                                 preferred_element_type=jnp.float32)
-    else:
-        # segment id per sorted row from the group-size prefix sums
-        bounds = jnp.cumsum(group_sizes)
-        seg = jnp.sum(jnp.arange(x.shape[0])[:, None] >= bounds[None, :],
-                      axis=1)                                       # (T,)
-        per_expert = jax.vmap(lambda we: _execute(cfg, x, we))(w)   # (E,T,f)
-        out = jnp.take_along_axis(
-            per_expert, jnp.minimum(seg, E - 1)[None, :, None], axis=0)[0]
-        # rows beyond sum(group_sizes) (padding) belong to no group: zero
-        # them like the native ragged_dot path, so flipping a site between
-        # native and FDP candidates never changes padded-row outputs
-        out = jnp.where((seg < E)[:, None], out, 0.0)
-    # report as one (T, d) x (d, f) call: k/m from x, n and weight stats from
-    # the flattened expert stack (the sample decoder reshapes (-1, d, f) and
-    # keeps group 0's block)
-    return _maybe_trace(site, cfg, x, w.reshape(E * d, f), out)
+    return _ragged_vjp((GemmSite.parse(site), pol), x, w, group_sizes)
 
 
 def _batched_apply(f, a: Array, b: Array) -> Array:
@@ -403,55 +827,6 @@ def _batched_apply(f, a: Array, b: Array) -> Array:
     return matmul_batching(f, jax.vmap(f))(a, b)
 
 
-def grouped_qk(q: Array, k: Array, *, site: str = "attn_qk",
-               policy: Optional[NumericsPolicy] = None) -> Array:
-    """GQA score einsum  q (B,Kh,G,Sq,hd) x k (B,Kh,Sk,hd) -> (B,Kh,G,Sq,Sk).
-
-    Native mode uses a real einsum so sequence-parallel sharding on Sq
-    survives (a reshape that merges (G, Sq) would force XLA to replicate the
-    sequence dim). Simulate/pallas modes vmap the 2D FDP kernel."""
-    pol = policy or current_policy()
-    cfg = pol.lookup(site)
-    _SITES_SEEN.add(site)
-    if cfg.mode == "native":
-        dt = cfg.fmt.jnp_dtype
-        out = jnp.einsum("bkgqd,bksd->bkgqs", q.astype(dt), k.astype(dt),
-                         preferred_element_type=jnp.float32)
-        if _TRACE_HOOK is not None:
-            # report in jnp.matmul shape so the profiler sees the real
-            # contraction: (B,Kh,G*Sq,hd) x (B,Kh,hd,Sk)
-            B_, Kh_, G_, Sq_, hd_ = q.shape
-            _maybe_trace(site, cfg, q.reshape(B_, Kh_, G_ * Sq_, hd_),
-                         jnp.swapaxes(k, -1, -2),
-                         out.reshape(B_, Kh_, G_ * Sq_, -1))
-        return out
-    B, Kh, G, Sq, hd = q.shape
-    qf = q.reshape(B, Kh, G * Sq, hd)
-    out = gemm(qf, jnp.swapaxes(k, -1, -2), site=site, policy=pol)
-    return out.reshape(B, Kh, G, Sq, k.shape[2])
-
-
-def grouped_av(p: Array, v: Array, *, site: str = "attn_av",
-               policy: Optional[NumericsPolicy] = None) -> Array:
-    """GQA value einsum  p (B,Kh,G,Sq,Sk) x v (B,Kh,Sk,hd) -> (B,Kh,G,Sq,hd)."""
-    pol = policy or current_policy()
-    cfg = pol.lookup(site)
-    _SITES_SEEN.add(site)
-    if cfg.mode == "native":
-        dt = cfg.fmt.jnp_dtype
-        out = jnp.einsum("bkgqs,bksd->bkgqd", p.astype(dt), v.astype(dt),
-                         preferred_element_type=jnp.float32)
-        if _TRACE_HOOK is not None:
-            B_, Kh_, G_, Sq_, Sk_ = p.shape
-            _maybe_trace(site, cfg, p.reshape(B_, Kh_, G_ * Sq_, Sk_), v,
-                         out.reshape(B_, Kh_, G_ * Sq_, -1))
-        return out
-    B, Kh, G, Sq, Sk = p.shape
-    pf = p.reshape(B, Kh, G * Sq, Sk)
-    out = gemm(pf, v, site=site, policy=pol)
-    return out.reshape(B, Kh, G, Sq, v.shape[-1])
-
-
 def policy_from_plan(path) -> NumericsPolicy:
     """Load a serialized ``repro.numerics`` PrecisionPlan and return the
     NumericsPolicy it deploys (the ``--precision-plan`` entry point)."""
@@ -459,7 +834,7 @@ def policy_from_plan(path) -> NumericsPolicy:
     return load_plan(path).to_policy()
 
 
-def quantize_inputs(x: Array, site: str = "generic",
+def quantize_inputs(x: Array, site: Union[str, GemmSite] = "generic",
                     policy: Optional[NumericsPolicy] = None) -> Array:
     """Round an activation/weight onto the policy format's grid (keeps f32
     carrier for posit formats)."""

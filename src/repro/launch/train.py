@@ -49,9 +49,12 @@ def main(argv=None):
         cfg = cfg.reduced()
     opt = adamw(lr=cosine_schedule(args.lr, warmup=10, total=args.steps))
     fdp_spec = AccumulatorSpec(ovf=10, msb=10, lsb=-20) if args.fdp_grad else None
+    policy = (policy_from_plan(args.precision_plan)
+              if args.precision_plan else None)
     step_fn = make_train_step(cfg, opt, LOCAL, remat="none",
                               microbatches=args.microbatches,
-                              fdp_grad_spec=fdp_spec, donate=False)
+                              fdp_grad_spec=fdp_spec, donate=False,
+                              numerics_policy=policy)
     data_src = SyntheticLM(cfg.vocab_size, args.seq, args.batch, seed=0)
 
     def data(step):
@@ -68,19 +71,30 @@ def main(argv=None):
 
     trainer = Trainer(cfg, opt, data, step_fn, args.ckpt,
                       save_every=args.save_every)
-    ctx = (use_policy(policy_from_plan(args.precision_plan))
-           if args.precision_plan else contextlib.nullcontext())
+    # the step carries the policy itself (make_train_step numerics_policy);
+    # keep the ambient context too so any dispatch outside the jitted step
+    # (debug probes, future eval hooks) agrees with it.
+    ctx = use_policy(policy) if policy is not None else contextlib.nullcontext()
     t0 = time.time()
     with ctx:
         trainer.run(args.steps)
     dt = time.time() - t0
     losses = [m["loss"] for m in trainer.metrics_log]
-    print(f"[train] {args.arch}{' (reduced)' if args.reduced else ''}: "
-          f"{args.steps} steps in {dt:.1f}s; "
-          f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    plan_note = f" plan={policy.name}" if policy is not None else ""
     if args.log:
         with open(args.log, "w") as f:
             json.dump(trainer.metrics_log, f)
+    if not losses:
+        # resumed from a checkpoint that already reached --steps: a no-op
+        # run is a successful (idempotent) outcome, not a crash (the --log
+        # file above still gets written — as an empty list — so sweep
+        # runners never read a stale log from a previous run)
+        print(f"[train] {args.arch}: checkpoint at {args.ckpt} already "
+              f"covers {args.steps} steps; nothing to do")
+        return
+    print(f"[train] {args.arch}{' (reduced)' if args.reduced else ''}: "
+          f"{args.steps} steps in {dt:.1f}s;{plan_note} "
+          f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
     assert losses[-1] < losses[0], "training did not reduce loss"
 
 

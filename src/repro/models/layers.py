@@ -1,6 +1,13 @@
 """Transformer layer substrate. Every matmul routes through the paper's BLAS
 dispatch layer (repro.core.dispatch.gemm) so numerics policies apply
-transparently to the whole zoo."""
+transparently to the whole zoo.
+
+Sites are threaded as plain strings (``site + "_qk"`` composition below);
+``GemmSite.parse`` in the dispatch layer lifts them to structured identities,
+and differentiating through any of these layers dispatches each backward GEMM
+under its own phase-qualified site (``attn_qk@bwd.dA`` / ``@bwd.dB``) — so a
+PrecisionPlan can give training gradients wider numerics than the forward
+pass without this file changing at all."""
 
 from __future__ import annotations
 
@@ -78,6 +85,9 @@ def dense(x: Array, w: Array, site: str, bias: Optional[Array] = None,
     Leading dims are passed through un-flattened: a reshape that merged a
     data-sharded batch dim with a model-sharded sequence dim would force XLA
     to all-gather the activations (unrepresentable merged sharding).
+
+    Under ``jax.grad`` the activation gradient dispatches as ``<site>@bwd.dA``
+    and the weight gradient (one flattened Aᵀ·G GEMM) as ``<site>@bwd.dB``.
 
     ``plan`` pins Pallas block sizes for this call-site; by default the
     dispatch layer resolves one from its GemmPlan cache per operand shape."""

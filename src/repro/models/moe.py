@@ -53,7 +53,9 @@ def _moe_ffn(x_sorted, group_sizes, cfg, wi, wg, wo):
     """Grouped GLU FFN over expert-sorted tokens, dispatched per call-site
     (moe_in / moe_gate / moe_out) so expert GEMMs are calibratable and
     plan-tailorable like every other site; the default native policy stays
-    on the fused ragged_dot fast path."""
+    on the fused ragged_dot fast path. Training gradients dispatch as the
+    phase-qualified twins (moe_in@bwd.dA = token grads, moe_in@bwd.dB =
+    per-expert weight grads) via ragged_gemm's custom_vjp."""
     h_in = dispatch.ragged_gemm(x_sorted, wi, group_sizes, site="moe_in")
     h_gate = dispatch.ragged_gemm(x_sorted, wg, group_sizes, site="moe_gate")
     h = activate(h_gate, cfg.act) * h_in

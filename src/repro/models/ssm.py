@@ -10,6 +10,11 @@ Sharding: d_inner (= g*e*head_dim) channels shard over the TP axis on the
 ``e`` dimension; all SSD einsums are batched over (g, e) so the layer is
 embarrassingly TP-parallel with no collectives (the projections in/out carry
 the usual Megatron pattern).
+
+Numerics: the in/out projections (``ssm_x``/``ssm_z``/``ssm_B``/``ssm_C``/
+``ssm_dt``/``ssm_out``) run through the dispatch layer, so SSM scan-block
+sites calibrate and plan-serve like attention/MLP sites — and under training
+their gradients dispatch as ``ssm_*@bwd.dA``/``@bwd.dB`` phase sites.
 """
 
 from __future__ import annotations

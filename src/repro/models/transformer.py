@@ -10,6 +10,11 @@ One uniform API across families:
 Layers are scanned (stacked parameters) so the lowered HLO stays compact for
 every depth; hybrid models scan groups (inner scan over SSM layers, shared
 attention block between groups); encoder-decoder runs two scans.
+
+Every GEMM site in this file is a *forward* site name; differentiating
+``forward`` (training, calibration with ``--phases fwd,bwd``) dispatches the
+matching ``<site>@bwd.dA``/``<site>@bwd.dB`` gradient sites automatically
+through the dispatch layer's custom_vjp — model assembly never names a phase.
 """
 
 from __future__ import annotations

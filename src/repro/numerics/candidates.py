@@ -8,6 +8,12 @@ lsb never extends below the point where the accumulation is already bit-exact
 for the observed operand range (deeper lsb costs energy and buys nothing).
 Each candidate carries the generator's datapath report, so the Pareto axes
 (modeled watts, pJ/MAC) come from the same model as the generated kernels.
+
+Phase-qualified backward sites (``attn_qk@bwd.dA``) enumerate through the
+same grid: their profiles were recorded from real cotangent/operand pairs, so
+the msb pin and lsb clamp automatically reflect gradient dynamic range and
+cancellation — typically pushing bwd candidates wider than their forward
+twins, which is exactly the paper's per-stage tailoring argument.
 """
 
 from __future__ import annotations

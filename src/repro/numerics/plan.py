@@ -6,6 +6,21 @@ modeled-energy/accuracy bookkeeping that justified the choice. Loading a plan
 yields a ``NumericsPolicy`` with per-site overrides, consumed by the launch
 drivers via ``--precision-plan`` — the same artifact moves from the search
 notebook to serving without translation.
+
+Schema v2 (phase-aware sites)
+-----------------------------
+Site keys are canonical ``GemmSite`` strings: forward sites stay plain names
+("attn_qk"), backward sites are phase-qualified ("attn_qk@bwd.dA"). A v2
+document additionally carries ``bwd_default`` — the widened fallback config
+that the deployed policy installs as a ``*@bwd`` wildcard override, so any
+gradient GEMM the search did not assign runs wide instead of silently
+inheriting its forward twin's (possibly narrow) datapath.
+
+v1 documents load transparently: their plain-name assignments become
+forward-only under the phase-aware policy lookup (exactly the v1 dispatch
+semantics), ``bwd_default`` is synthesized by widening the plan default
+(``repro.core.dispatch.widen_config``), and ``meta.migrated_from`` records
+the up-conversion. Saving a migrated plan writes a v2 document.
 """
 
 from __future__ import annotations
@@ -15,10 +30,11 @@ import json
 from typing import Optional
 
 from repro.core.accumulator import AccumulatorSpec
-from repro.core.dispatch import GemmConfig, NumericsPolicy
+from repro.core.dispatch import (GemmConfig, GemmSite, NumericsPolicy,
+                                 widen_config)
 from repro.core.formats import get_format
 
-PLAN_VERSION = 1
+PLAN_VERSION = 2
 
 
 def _cfg_to_json(cfg: GemmConfig) -> dict:
@@ -43,7 +59,8 @@ def _cfg_from_json(d: dict) -> GemmConfig:
 
 @dataclasses.dataclass(frozen=True)
 class SitePlan:
-    """One call-site's assignment plus its search-time evidence."""
+    """One call-site's assignment plus its search-time evidence. ``site`` is
+    the canonical GemmSite key (phase-qualified for backward sites)."""
 
     site: str
     cfg: GemmConfig
@@ -51,6 +68,14 @@ class SitePlan:
     energy_j: Optional[float] = None       # modeled, at traced MAC count
     macs: int = 0
     latency_us: Optional[float] = None
+
+    @property
+    def gemm_site(self) -> GemmSite:
+        return GemmSite.parse(self.site)
+
+    @property
+    def phase(self) -> str:
+        return self.gemm_site.phase
 
     def to_json(self) -> dict:
         d = {"site": self.site, "cfg": _cfg_to_json(self.cfg),
@@ -75,7 +100,8 @@ class PrecisionPlan:
 
     name: str
     sites: tuple = ()                      # tuple[SitePlan]
-    default: GemmConfig = GemmConfig()     # unlisted sites (native bf16)
+    default: GemmConfig = GemmConfig()     # unlisted fwd sites (native bf16)
+    bwd_default: Optional[GemmConfig] = None  # unlisted bwd sites (widened)
     budget_bits: Optional[float] = None
     version: int = PLAN_VERSION
     meta: dict = dataclasses.field(default_factory=dict)
@@ -86,17 +112,28 @@ class PrecisionPlan:
                 return s
         return None
 
+    def phase_sites(self, phase: str) -> tuple:
+        return tuple(s for s in self.sites if s.phase == phase)
+
     def to_policy(self) -> NumericsPolicy:
-        """The NumericsPolicy this plan deploys (exact-match per-site
-        overrides over the plan default)."""
+        """The NumericsPolicy this plan deploys: exact-match per-site
+        overrides over the plan default, with the ``*@bwd`` widened fallback
+        appended last (lowest precedence) so explicitly-searched bwd sites
+        always win over it. A plan constructed without ``bwd_default``
+        deploys ``widen_config(default)`` there — the invariant holds for
+        in-memory plans exactly as for loaded ones, so ``to_policy`` and
+        save→load→``to_policy`` agree on every site."""
+        overrides = [(s.site, s.cfg) for s in self.sites]
+        overrides.append(
+            ("*@bwd", self.bwd_default or widen_config(self.default)))
         return NumericsPolicy(
             default=self.default,
-            overrides=tuple((s.site, s.cfg) for s in self.sites),
+            overrides=tuple(overrides),
             name=f"plan:{self.name}")
 
     # -- serialization -----------------------------------------------------
     def to_json(self) -> dict:
-        return {
+        doc = {
             "version": self.version,
             "kind": "repro.numerics.PrecisionPlan",
             "name": self.name,
@@ -105,6 +142,9 @@ class PrecisionPlan:
             "sites": [s.to_json() for s in self.sites],
             "meta": self.meta,
         }
+        if self.bwd_default is not None:
+            doc["bwd_default"] = _cfg_to_json(self.bwd_default)
+        return doc
 
     @classmethod
     def from_json(cls, d: dict) -> "PrecisionPlan":
@@ -116,14 +156,34 @@ class PrecisionPlan:
         if "sites" not in d or "name" not in d:
             raise ValueError("not a PrecisionPlan document "
                              "(missing 'name'/'sites')")
+        default = (_cfg_from_json(d["default"]) if "default" in d
+                   else GemmConfig())
+        sites = tuple(SitePlan.from_json(s) for s in d["sites"])
+        for s in sites:
+            GemmSite.parse(s.site)         # reject malformed site keys early
+        meta = dict(d.get("meta", {}))
+        if version <= 1:
+            # v1 -> v2 up-conversion: plain-name assignments are forward-only
+            # under phase-aware lookup (no rewrite needed), and the backward
+            # namespace falls to the *widened* default — gradients never
+            # silently inherit a narrow forward datapath.
+            bwd_default = widen_config(default)
+            meta.setdefault("migrated_from", version or 1)
+        elif d.get("bwd_default") is not None:
+            bwd_default = _cfg_from_json(d["bwd_default"])
+        else:
+            # a v2 document with the key stripped (hand-authored, tooling)
+            # gets the same treatment as v1: loading NEVER yields a policy
+            # whose unassigned gradient GEMMs inherit the forward default.
+            bwd_default = widen_config(default)
         return cls(
             name=d["name"],
-            sites=tuple(SitePlan.from_json(s) for s in d["sites"]),
-            default=_cfg_from_json(d["default"]) if "default" in d
-            else GemmConfig(),
+            sites=sites,
+            default=default,
+            bwd_default=bwd_default,
             budget_bits=d.get("budget_bits"),
-            version=version or PLAN_VERSION,
-            meta=dict(d.get("meta", {})),
+            version=PLAN_VERSION,
+            meta=meta,
         )
 
     def save(self, path) -> None:
@@ -132,12 +192,14 @@ class PrecisionPlan:
             f.write("\n")
 
     def describe(self) -> str:
+        bwd = (f", bwd default {self.bwd_default.tag()}"
+               if self.bwd_default else "")
         lines = [f"PrecisionPlan {self.name!r} v{self.version} "
                  f"(budget {self.budget_bits} bits, "
-                 f"default {self.default.tag()})"]
+                 f"default {self.default.tag()}{bwd})"]
         for s in self.sites:
             bits = f"{s.error_bits:5.1f}b" if s.error_bits is not None else ""
-            lines.append(f"  {s.site:14s} {s.cfg.tag():40s} {bits}")
+            lines.append(f"  {s.site:22s} {s.cfg.tag():40s} {bits}")
         return "\n".join(lines)
 
 

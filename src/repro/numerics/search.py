@@ -201,19 +201,33 @@ def search(trace: CalibrationTrace, budget_bits: float, *,
            margin_bits: float = 2.0,
            measure_latency: bool = False,
            validate: Optional[Callable[[NumericsPolicy], float]] = None,
-           max_upgrades: int = 16) -> SearchResult:
+           max_upgrades: int = 16,
+           phases: Sequence[str] = ("fwd", "bwd"),
+           upgrade_phases: Sequence[str] = ("fwd",)) -> SearchResult:
     """Greedy per-site assignment meeting ``budget_bits`` end-to-end correct
     bits at minimum modeled energy.
+
+    ``phases`` restricts which site namespaces are searched: a trace
+    calibrated through a ``value_and_grad`` step carries phase-qualified
+    backward sites (``attn_qk@bwd.dA``) alongside the forward ones, and each
+    traced phase gets its own per-site assignment. Unassigned bwd sites fall
+    to the emitted plan's widened ``bwd_default``.
 
     ``validate``, when given, maps an assembled NumericsPolicy to measured
     end-to-end correct bits (e.g. a model forward vs the uniform-FDP oracle);
     while it reports less than the budget, the currently-weakest site is
-    upgraded along its Pareto frontier (``max_upgrades`` cap).
+    upgraded along its Pareto frontier (``max_upgrades`` cap). Only sites
+    whose phase is in ``upgrade_phases`` participate — the stock validator is
+    a *forward* pass, which backward assignments cannot influence, so
+    upgrading them there would burn the upgrade budget for nothing.
     """
+    phases = tuple(phases)
     profiles = {s: p for s, p in trace.profiles().items()
-                if p.sample is not None}
+                if p.sample is not None
+                and dispatch.GemmSite.parse(s).phase in phases}
     if not profiles:
-        raise ValueError("trace has no calibrated sites with samples")
+        raise ValueError(
+            f"trace has no calibrated sites with samples in phases {phases}")
 
     decisions: dict[str, SiteDecision] = {}
     site_target = budget_bits + margin_bits
@@ -234,11 +248,14 @@ def search(trace: CalibrationTrace, budget_bits: float, *,
 
     validated = None
     if validate is not None:
+        up_phases = tuple(upgrade_phases)
         for _ in range(max_upgrades + 1):
             validated = float(validate(assemble().to_policy()))
             if validated >= budget_bits:
                 break
-            upgradable = [d for d in decisions.values() if d.can_upgrade()]
+            upgradable = [
+                d for d in decisions.values() if d.can_upgrade()
+                and dispatch.GemmSite.parse(d.site).phase in up_phases]
             if not upgradable:
                 break
             weakest = min(upgradable, key=lambda d: d.pick.error_bits)
@@ -257,6 +274,7 @@ def _plan_from_decisions(name, decisions, budget_bits,
                          default: Optional[GemmConfig]) -> PrecisionPlan:
     sites = []
     modeled = baseline = 0.0
+    by_phase = {"fwd": 0.0, "bwd": 0.0}
     total_macs = 0
     base_power = energy.gemm_power(FP32, AccumulatorSpec.paper_91bit())
     for site, d in sorted(decisions.items()):
@@ -265,14 +283,19 @@ def _plan_from_decisions(name, decisions, budget_bits,
                               error_bits=p.error_bits, energy_j=p.energy_j,
                               macs=d.profile.macs, latency_us=p.latency_us))
         modeled += p.energy_j
+        by_phase[dispatch.GemmSite.parse(site).phase] += p.energy_j
         baseline += base_power.energy_joules(d.profile.macs)
         total_macs += d.profile.macs
     meta = {
         "modeled_energy_j": modeled,
+        "modeled_energy_fwd_j": by_phase["fwd"],
+        "modeled_energy_bwd_j": by_phase["bwd"],
         "baseline_energy_j": baseline,
         "energy_vs_baseline": modeled / baseline if baseline else None,
         "total_macs": total_macs,
     }
+    default = default or GemmConfig()
     return PrecisionPlan(name=name, sites=tuple(sites),
-                         default=default or GemmConfig(),
+                         default=default,
+                         bwd_default=dispatch.widen_config(default),
                          budget_bits=budget_bits, meta=meta)

@@ -15,9 +15,14 @@ host-side ``CalibrationTrace``. Each call-site accumulates a ``SiteProfile``:
   * one captured operand sample per site, on which the search evaluates
     candidate numerics against a bit-exact FDP oracle.
 
-Calibration runs *forward* passes. Re-executed computations (``jax.remat``
-backward recompute, repeated jit calls) fire the callbacks again and inflate
-call counts accordingly; trace un-rematted forwards for clean statistics.
+Calibration may also run *backward* passes: differentiating through the
+dispatch layer (its ``jax.custom_vjp``) fires the hook for every backward
+GEMM under its own phase-qualified site key (``attn_qk@bwd.dA``), so a
+``value_and_grad`` step under ``calibrate()`` profiles gradient exponent
+ranges and cancellation separately from the forward sites. Re-executed
+computations (``jax.remat`` backward recompute, repeated jit calls) fire the
+callbacks again and inflate call counts accordingly; trace un-rematted
+forwards for clean statistics.
 """
 
 from __future__ import annotations
@@ -248,6 +253,25 @@ class CalibrationTrace:
     def _record(self, site, batch, m, n, k, tag, keep_sample,
                 a_max, a_min, b_max, b_min, o_max, o_min,
                 sample_a, sample_b):
+        # Materialize every incoming value BEFORE taking the lock. Callbacks
+        # arrive on two threads at once — the main thread (eager dispatch
+        # runs debug callbacks inline) and the runtime's host-callback worker
+        # (callbacks staged inside compiled scan/jit regions). Forcing a
+        # device sync (float()/np.asarray on a jax.Array) while holding the
+        # lock deadlocks: the main thread waits on async work whose pending
+        # host callbacks the worker can only run after taking this lock.
+        a_max, b_max, o_max = float(a_max), float(b_max), float(o_max)
+        mins = {"a_abs_min_nz": float(a_min), "b_abs_min_nz": float(b_min),
+                "out_abs_min_nz": float(o_min)}
+        if keep_sample and self.has_sample(site):
+            # keep_sample is baked in at staging time, so a compiled region
+            # re-delivers it on every execution — skip the host copy once
+            # the site's sample has landed (has_sample holds the lock only
+            # for a dict probe: no device sync, the deadlock fix stands)
+            keep_sample = False
+        if keep_sample:
+            sample_a = np.asarray(sample_a, np.float32).copy()
+            sample_b = np.asarray(sample_b, np.float32).copy()
         with self._lock:
             p = self._profiles.setdefault(site, SiteProfile(site))
             p.calls += 1
@@ -256,22 +280,25 @@ class CalibrationTrace:
             key = (batch, m, n, k)
             p.shapes[key] = p.shapes.get(key, 0) + 1
             p.cfg_tags.add(tag)
-            p.a_abs_max = max(p.a_abs_max, float(a_max))
-            p.b_abs_max = max(p.b_abs_max, float(b_max))
-            p.out_abs_max = max(p.out_abs_max, float(o_max))
-            for attr, v in (("a_abs_min_nz", a_min), ("b_abs_min_nz", b_min),
-                            ("out_abs_min_nz", o_min)):
-                v = float(v)
+            p.a_abs_max = max(p.a_abs_max, a_max)
+            p.b_abs_max = max(p.b_abs_max, b_max)
+            p.out_abs_max = max(p.out_abs_max, o_max)
+            for attr, v in mins.items():
                 if math.isfinite(v):
                     setattr(p, attr, min(getattr(p, attr), v))
             if keep_sample and p.sample_a is None:
-                p.sample_a = np.asarray(sample_a, np.float32).copy()
-                p.sample_b = np.asarray(sample_b, np.float32).copy()
+                p.sample_a = sample_a
+                p.sample_b = sample_b
 
     # -- queries -----------------------------------------------------------
-    def sites(self) -> list[str]:
+    def sites(self, phase: Optional[str] = None) -> list[str]:
+        """All traced site keys, optionally restricted to one phase
+        ("fwd" returns plain names, "bwd" the ``@bwd.*`` keys)."""
         with self._lock:
-            return sorted(self._profiles)
+            keys = sorted(self._profiles)
+        if phase is None:
+            return keys
+        return [k for k in keys if dispatch.GemmSite.parse(k).phase == phase]
 
     def has_sample(self, site: str) -> bool:
         with self._lock:

@@ -4,6 +4,7 @@ order-invariant accumulation), and a fault-tolerant Trainer driver."""
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Callable, Optional
@@ -12,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.accumulator import AccumulatorSpec
+from repro.core.dispatch import NumericsPolicy, use_policy
 from repro.models import layers as L
 from repro.models import transformer as T
 
@@ -85,13 +87,18 @@ def make_train_step(cfg, opt: Optimizer, dist: L.Distribution = L.LOCAL, *,
                     remat: str = "block", microbatches: int = 1,
                     fdp_grad_spec: Optional[AccumulatorSpec] = None,
                     z_loss: float = 0.0, moe_impl: str = "tp",
-                    donate: bool = True):
+                    donate: bool = True,
+                    numerics_policy: Optional[NumericsPolicy] = None):
     """Returns jitted ((params, opt_state), batch) -> ((params, opt_state),
     metrics).
 
     microbatches > 1: gradients accumulated over a scan of microbatches.
     fdp_grad_spec: accumulate microbatch gradients on the paper's fixed-point
     grid (int32) — bitwise identical results for ANY microbatch split.
+    numerics_policy: trace the whole step (forward AND the value_and_grad
+    backward) under this policy, so a PrecisionPlan's phase-qualified bwd
+    assignments (``attn_qk@bwd.dA``) actually dispatch in training — no
+    reliance on an ambient ``use_policy`` context being live at first call.
     """
     loss_fn = make_loss_fn(cfg, dist, z_loss=z_loss, remat=remat,
                            moe_impl=moe_impl)
@@ -141,10 +148,17 @@ def make_train_step(cfg, opt: Optimizer, dist: L.Distribution = L.LOCAL, *,
 
     def step(carry, batch):
         params, opt_state = carry
-        if microbatches > 1:
-            grads, metrics = accumulate(params, batch)
-        else:
-            grads, metrics = single(params, batch)
+        # policy context at *trace* time: dispatch lookups (fwd and bwd —
+        # custom_vjp rules trace inside the same context) resolve under the
+        # plan's policy, and a later retrace (new shapes, donated buffers)
+        # re-applies it instead of depending on the ambient thread state.
+        ctx = (use_policy(numerics_policy) if numerics_policy is not None
+               else contextlib.nullcontext())
+        with ctx:
+            if microbatches > 1:
+                grads, metrics = accumulate(params, batch)
+            else:
+                grads, metrics = single(params, batch)
         updates, opt_state = opt.update(grads, opt_state, params)
         params = apply_updates(params, updates)
         metrics = dict(metrics)

@@ -10,6 +10,17 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture
+def clean_sites():
+    """Reset the process-global dispatch site registry around a test, so
+    ``sites_seen()`` assertions never depend on which tests dispatched GEMMs
+    earlier in the session (the registry is process-wide by design)."""
+    from repro.core import dispatch
+    dispatch.reset_sites_seen()
+    yield dispatch.sites_seen
+    dispatch.reset_sites_seen()
+
+
 def frac_to_f32_rne(f: Fraction) -> np.float32:
     """Correct single RNE from Fraction to float32 (test oracle helper)."""
     if f == 0:

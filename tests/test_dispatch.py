@@ -140,11 +140,46 @@ def test_grouped_einsums_match_modes(rng):
                                rtol=1e-5, atol=1e-5)
 
 
-def test_sites_are_traced():
+def test_sites_are_traced(clean_sites):
     a = jnp.ones((4, 4))
     with use_policy(MXU_BF16):
         gemm(a, a, site="my_unique_site")
-    assert "my_unique_site" in sites_seen()
+    assert sites_seen() == {"my_unique_site"}   # registry was reset: exact
+
+
+def test_reset_sites_seen(clean_sites):
+    from repro.core.dispatch import reset_sites_seen
+    a = jnp.ones((4, 4))
+    with use_policy(MXU_BF16):
+        gemm(a, a, site="ephemeral")
+    assert "ephemeral" in sites_seen()
+    reset_sites_seen()
+    assert sites_seen() == frozenset()
+
+
+def test_phase_aware_lookup():
+    """v1-style patterns (plain names, trailing *) are forward-only; bwd
+    sites resolve via phase-qualified patterns and the *@bwd fallback."""
+    from repro.core.dispatch import GemmSite, widen_config
+    base = GemmConfig(BF16, None, "native")
+    narrow = GemmConfig(FP32, AccumulatorSpec(4, 8, -8), "simulate")
+    wide = widen_config(base)
+    pol = NumericsPolicy(base, overrides=(
+        ("attn_qk@bwd.dA", narrow), ("attn_*", narrow), ("*@bwd", wide)))
+    assert pol.lookup("attn_qk") is narrow          # fwd wildcard
+    assert pol.lookup("attn_qk@bwd.dA") is narrow   # explicit bwd operand
+    assert pol.lookup("attn_qk@bwd.dB") is wide     # attn_* must NOT catch bwd
+    assert pol.lookup("mlp_in@bwd.dA") is wide
+    assert pol.lookup("mlp_in") is base
+    # GemmSite objects and canonical strings are interchangeable
+    assert pol.lookup(GemmSite("attn_qk", "bwd", "dA")) is narrow
+    s = GemmSite.parse("moe_in@bwd.dB")
+    assert (s.name, s.phase, s.operand) == ("moe_in", "bwd", "dB")
+    assert s.key == "moe_in@bwd.dB"
+    with pytest.raises(ValueError):
+        GemmSite.parse("x@sideways")
+    with pytest.raises(ValueError):
+        GemmSite("x", "fwd", "dA")                  # fwd carries no operand
 
 
 def test_generator_reports():

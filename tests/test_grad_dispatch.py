@@ -1,0 +1,294 @@
+"""Phase-aware gradient dispatch: the custom_vjp on gemm/ragged_gemm/
+grouped_qk/grouped_av routes every backward GEMM through its own
+phase-qualified site (``<site>@bwd.dA`` / ``<site>@bwd.dB``) — looked up in
+the policy, registered in ``sites_seen()``, recorded by calibration traces —
+while native-mode gradients stay bit-identical to autodiff through the
+forward computation."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import AccumulatorSpec, BF16, FP32
+from repro.core.dispatch import (FDP91, MXU_FP32, GemmConfig, NumericsPolicy,
+                                 gemm, grouped_av, grouped_qk, ragged_gemm,
+                                 sites_seen, use_policy, widen_config)
+from repro.numerics import PrecisionPlan, SitePlan, calibrate
+
+
+# ---------------------------------------------------------------------------
+# gemm: bit-identity + site registration
+# ---------------------------------------------------------------------------
+def test_gemm_native_grads_bitexact_vs_autodiff(rng, clean_sites):
+    """custom_vjp output == autodiff-through-forward, bit for bit, for the
+    native mode (same casts, same contraction layout, same dtypes)."""
+    a = jnp.asarray(rng.standard_normal((3, 8, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, 4)), jnp.float32)
+
+    def f_dispatch(a, w):
+        with use_policy(MXU_FP32):
+            return (gemm(a, w, site="proj") ** 2).sum()
+
+    def f_raw(a, w):
+        out = jnp.matmul(a.astype(jnp.float32), w.astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+        return (out ** 2).sum()
+
+    ga = jax.grad(f_dispatch, argnums=(0, 1))(a, w)
+    gr = jax.grad(f_raw, argnums=(0, 1))(a, w)
+    assert jnp.array_equal(ga[0], gr[0]), "dA diverged from autodiff"
+    assert jnp.array_equal(ga[1], gr[1]), "dB diverged from autodiff"
+    assert {"proj", "proj@bwd.dA", "proj@bwd.dB"} <= sites_seen()
+
+
+def test_gemm_1d_promotion_grads(rng):
+    """jnp.matmul's 1-D promotion survives differentiation: vector-matrix,
+    matrix-vector, and the 0-d-cotangent vector-dot case all match autodiff
+    of the raw matmul."""
+    v = jnp.asarray(rng.standard_normal((16,)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((16,)), jnp.float32)
+    m = jnp.asarray(rng.standard_normal((16, 4)), jnp.float32)
+    cases = [(v, m), (m.T, u), (v, u)]
+    for x, y in cases:
+        def f_dispatch(x, y):
+            with use_policy(MXU_FP32):
+                return gemm(x, y, site="vec").sum()
+
+        def f_raw(x, y):
+            return jnp.matmul(x, y, preferred_element_type=jnp.float32).sum()
+
+        gd = jax.grad(f_dispatch, argnums=(0, 1))(x, y)
+        gr = jax.grad(f_raw, argnums=(0, 1))(x, y)
+        for got, want in zip(gd, gr):
+            assert got.shape == want.shape
+            assert jnp.array_equal(got, want), (x.shape, y.shape)
+
+
+def test_gemm_forward_value_unchanged_by_custom_vjp(rng):
+    """value_and_grad's primal output is the plain dispatched forward."""
+    a = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, 4)), jnp.float32)
+    with use_policy(MXU_FP32):
+        fwd_only = gemm(a, w, site="p")
+        val, _ = jax.value_and_grad(
+            lambda x, y: gemm(x, y, site="p").sum(), argnums=(0, 1))(a, w)
+    assert float(val) == float(fwd_only.sum())
+
+
+def test_bwd_sites_dispatch_under_their_own_config(rng):
+    """A deliberately-narrow bwd override changes gradients but never the
+    forward output — proof the backward GEMMs resolve their own configs."""
+    a = jnp.asarray(rng.standard_normal((16, 32)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((32, 8)), jnp.float32)
+    base = NumericsPolicy(GemmConfig(FP32, None, "native"))
+    narrow = base.with_override(
+        "p@bwd", GemmConfig(BF16, AccumulatorSpec(2, 4, -4), "simulate"))
+
+    def loss(pol):
+        return jax.value_and_grad(
+            lambda x, y: (gemm(x, y, site="p", policy=pol) ** 2).sum(),
+            argnums=(0, 1))(a, w)
+
+    v0, g0 = loss(base)
+    v1, g1 = loss(narrow)
+    assert float(v0) == float(v1)                   # forward bit-identical
+    assert not jnp.array_equal(g0[0], g1[0])        # bwd really re-dispatched
+    assert not jnp.array_equal(g0[1], g1[1])
+
+
+def test_fdp_simulate_grads_are_finite_and_dispatched(rng, clean_sites):
+    """Differentiating a simulate-mode site no longer autodiffs through the
+    integer limb algebra: the bwd GEMMs dispatch as sites of their own
+    (under FDP91 they run the 91-bit FDP too) and produce usable grads."""
+    a = jnp.asarray(rng.standard_normal((8, 32)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((32, 4)), jnp.float32)
+    with use_policy(FDP91):
+        g = jax.grad(lambda x, y: gemm(x, y, site="s").sum(),
+                     argnums=(0, 1))(a, w)
+    assert all(bool(jnp.all(jnp.isfinite(t))) for t in g)
+    assert {"s", "s@bwd.dA", "s@bwd.dB"} <= sites_seen()
+    # the 91-bit bwd GEMM is exact on this data: matches f64 reference
+    ref_da = np.ones((8, 4)) @ np.asarray(w, np.float64).T
+    np.testing.assert_allclose(np.asarray(g[0]), ref_da, rtol=2e-6,
+                               atol=32 * 2.0 ** -30)
+
+
+# ---------------------------------------------------------------------------
+# grouped_qk / grouped_av under jax.grad (satellite)
+# ---------------------------------------------------------------------------
+def test_grouped_qk_av_grads_bitexact_and_traced(rng, clean_sites):
+    q = jnp.asarray(rng.standard_normal((2, 2, 3, 5, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 2, 7, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 2, 7, 8)), jnp.float32)
+
+    def f_dispatch(q, k, v):
+        with use_policy(MXU_FP32):
+            s = grouped_qk(q, k, site="attn_qk")
+            p = jax.nn.softmax(s, axis=-1)
+            o = grouped_av(p, v, site="attn_av")
+        return (o ** 2).sum()
+
+    def f_raw(q, k, v):
+        s = jnp.einsum("bkgqd,bksd->bkgqs", q.astype(jnp.float32),
+                       k.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bksd->bkgqd", p.astype(jnp.float32),
+                       v.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        return (o ** 2).sum()
+
+    with calibrate() as trace:
+        gd = jax.grad(f_dispatch, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_raw, argnums=(0, 1, 2))(q, k, v)
+    for got, want, name in zip(gd, gr, "qkv"):
+        assert jnp.array_equal(got, want), f"d{name} diverged from autodiff"
+
+    # bwd sites registered and calibrated with their own profiles + samples
+    want_sites = {"attn_qk@bwd.dA", "attn_qk@bwd.dB",
+                  "attn_av@bwd.dA", "attn_av@bwd.dB"}
+    assert want_sites <= sites_seen()
+    assert want_sites <= set(trace.sites("bwd"))
+    for s in want_sites:
+        prof = trace.profile(s)
+        assert prof.calls >= 1 and prof.macs > 0
+        assert prof.sample is not None
+        assert prof.a_abs_max > 0.0
+
+
+# ---------------------------------------------------------------------------
+# ragged_gemm under jax.grad (satellite)
+# ---------------------------------------------------------------------------
+def test_ragged_gemm_grads_match_autodiff_and_trace(rng, clean_sites):
+    T, d, f, E = 12, 6, 5, 3
+    x = jnp.asarray(rng.standard_normal((T, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((E, d, f)), jnp.float32)
+    gs = jnp.asarray([5, 4, 3], jnp.int32)
+
+    def f_dispatch(x, w):
+        with use_policy(MXU_FP32):
+            return (ragged_gemm(x, w, gs, site="moe_in") ** 2).sum()
+
+    def f_raw(x, w):
+        out = jax.lax.ragged_dot(x, w, gs,
+                                 preferred_element_type=jnp.float32)
+        return (out ** 2).sum()
+
+    with calibrate() as trace:
+        gd = jax.grad(f_dispatch, argnums=(0, 1))(x, w)
+    gr = jax.grad(f_raw, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(gd[0]), np.asarray(gr[0]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gd[1]), np.asarray(gr[1]),
+                               rtol=1e-5, atol=1e-5)
+    assert {"moe_in", "moe_in@bwd.dA", "moe_in@bwd.dB"} <= sites_seen()
+    assert {"moe_in@bwd.dA", "moe_in@bwd.dB"} <= set(trace.sites("bwd"))
+
+
+def test_ragged_gemm_grads_ignore_padded_rows(rng):
+    """Rows beyond sum(group_sizes) belong to no expert: their token grads
+    are zero and they contribute nothing to any expert's weight grad."""
+    T, d, f, E = 10, 4, 3, 2
+    x = jnp.asarray(rng.standard_normal((T, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((E, d, f)), jnp.float32)
+    gs = jnp.asarray([4, 3], jnp.int32)              # 3 padded rows
+
+    def loss(x, w):
+        with use_policy(MXU_FP32):
+            return (ragged_gemm(x, w, gs, site="moe_pad") ** 2).sum()
+
+    dx, dw = jax.grad(loss, argnums=(0, 1))(x, w)
+    assert bool(jnp.all(dx[7:] == 0.0))
+    x2 = x.at[8].set(1e6)                            # padded row perturbation
+    dw2 = jax.grad(loss, argnums=1)(x2, w)
+    assert jnp.array_equal(dw, dw2)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: a traced train step under a v2 plan with narrow bwd sites
+# ---------------------------------------------------------------------------
+def _tiny_cfg():
+    from repro.configs import get_config
+    return get_config("paper-mlp").reduced(
+        d_model=64, d_ff=128, n_layers=2, vocab_size=64, n_heads=4,
+        n_kv_heads=4, head_dim=16)
+
+
+def test_train_step_dispatches_bwd_sites_under_v2_plan(clean_sites):
+    """The ISSUE acceptance scenario: a v2 plan assigns a deliberately-narrow
+    format to paper-mlp bwd sites and the default to fwd sites; a traced
+    train step shows the bwd sites dispatched under their own configs
+    (``@bwd`` keys in sites_seen, distinct per-phase profiles in the
+    calibration trace), and the fwd sites untouched by the narrow configs."""
+    from repro.data.synthetic import SyntheticLM
+    from repro.train.loop import make_train_step
+    from repro.train.optimizer import Optimizer
+
+    cfg = _tiny_cfg()
+    default = GemmConfig(FP32, None, "native")
+    narrow = GemmConfig(BF16, AccumulatorSpec(3, 6, -6), "simulate")
+    plan = PrecisionPlan(
+        name="bwd-narrow",
+        sites=(SitePlan("mlp_in@bwd.dA", narrow),
+               SitePlan("mlp_in@bwd.dB", narrow)),
+        default=default, bwd_default=widen_config(default), budget_bits=4.0)
+
+    ident = Optimizer(init=lambda p: {"grad_norm": jnp.zeros(())},
+                      update=lambda g, s, p: (g, s))
+    step = make_train_step(cfg, ident, remat="none", donate=False,
+                           numerics_policy=plan.to_policy())
+    from repro.models import init
+    params = init(cfg, jax.random.key(0))
+    ds = SyntheticLM(cfg.vocab_size, 16, 4, seed=0)
+    tb = ds.batch(0)
+    batch = {"tokens": tb.tokens, "targets": tb.targets,
+             "loss_mask": tb.loss_mask}
+
+    with calibrate() as trace:
+        (_, metrics) = step((params, ident.init(params)), batch)[0], None
+    seen = sites_seen()
+    assert "mlp_in@bwd.dA" in seen and "mlp_in@bwd.dB" in seen
+    assert any(s.endswith("@bwd.dA") for s in seen if s.startswith("attn"))
+
+    # the narrow config really served the bwd sites; fwd stayed default
+    assert trace.profile("mlp_in@bwd.dA").cfg_tags == {narrow.tag()}
+    assert trace.profile("mlp_in").cfg_tags == {default.tag()}
+    # unassigned bwd sites fell to the widened fallback, not the narrow one
+    assert trace.profile("mlp_out@bwd.dA").cfg_tags == \
+        {widen_config(default).tag()}
+    # distinct per-phase statistics: gradient operands, not activations
+    fwd_prof = trace.profile("mlp_in")
+    bwd_prof = trace.profile("mlp_in@bwd.dA")
+    assert bwd_prof.calls >= 1 and bwd_prof.macs > 0
+    assert fwd_prof.a_abs_max != bwd_prof.a_abs_max
+
+
+def test_train_step_under_fdp_bwd_plan_trains():
+    """One optimizer step with *all* gradient GEMMs forced through the exact
+    91-bit FDP runs end to end and produces finite parameter updates (before
+    the custom_vjp this would have autodiffed through integer limb ops)."""
+    from repro.data.synthetic import SyntheticLM
+    from repro.train.loop import make_train_step
+    from repro.train.optimizer import adamw
+
+    cfg = _tiny_cfg()
+    pol = NumericsPolicy(
+        GemmConfig(FP32, None, "native"),
+        overrides=(("*@bwd", GemmConfig(
+            FP32, AccumulatorSpec.paper_91bit(), "simulate")),))
+    step = make_train_step(cfg, adamw(lr=1e-3), remat="none", donate=False,
+                           numerics_policy=pol)
+    from repro.models import init
+    params = init(cfg, jax.random.key(0))
+    opt = adamw(lr=1e-3)
+    ds = SyntheticLM(cfg.vocab_size, 12, 2, seed=0)
+    tb = ds.batch(0)
+    batch = {"tokens": tb.tokens, "targets": tb.targets,
+             "loss_mask": tb.loss_mask}
+    (new_params, _), metrics = step((params, opt.init(params)), batch)
+    assert np.isfinite(float(metrics["loss"]))
+    moved = jax.tree.map(lambda a, b: bool(jnp.all(jnp.isfinite(b)))
+                         and not bool(jnp.array_equal(a, b)),
+                         params, new_params)
+    assert all(jax.tree.leaves(moved))

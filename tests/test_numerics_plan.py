@@ -75,6 +75,82 @@ def test_malformed_document_rejected():
         PrecisionPlan.from_json({"version": 1, "something": "else"})
 
 
+V1_FIXTURE = os.path.join(os.path.dirname(__file__), os.pardir,
+                          "examples", "plans", "fixtures", "paper_mlp.v1.json")
+
+
+def test_v1_document_migrates_to_v2():
+    """Loading a v1 plan up-converts: assignments stay forward-only (bwd
+    twins of assigned sites fall through), bwd_default is the widened plan
+    default, and provenance lands in meta."""
+    from repro.core.dispatch import widen_config
+    plan = load_plan(V1_FIXTURE)
+    assert plan.version == PLAN_VERSION
+    assert plan.meta["migrated_from"] == 1
+    assert plan.bwd_default == widen_config(plan.default)
+    pol = plan.to_policy()
+    for s in plan.sites:
+        assert pol.lookup(s.site) == s.cfg                      # fwd intact
+        assert pol.lookup(f"{s.site}@bwd.dA") == plan.bwd_default
+        assert pol.lookup(f"{s.site}@bwd.dB") == plan.bwd_default
+    assert pol.lookup("__unlisted__@bwd.dB") == plan.bwd_default
+
+
+def test_migrated_plan_round_trips_as_v2(tmp_path):
+    plan = load_plan(V1_FIXTURE)
+    path = tmp_path / "migrated.json"
+    plan.save(path)
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["version"] == PLAN_VERSION
+    assert doc["bwd_default"] is not None
+    again = load_plan(path)
+    assert again.bwd_default == plan.bwd_default
+    assert [(s.site, s.cfg) for s in again.sites] == \
+        [(s.site, s.cfg) for s in plan.sites]
+
+
+def test_v2_plan_with_bwd_sites_round_trips():
+    from repro.core.dispatch import widen_config
+    base = GemmConfig(BF16, None, "native")
+    narrow = GemmConfig(BF16, AccumulatorSpec(2, 4, -6), "simulate")
+    p = PrecisionPlan(
+        name="phased",
+        sites=(SitePlan("mlp_in", GemmConfig(FP32, None, "native")),
+               SitePlan("mlp_in@bwd.dA", narrow),
+               SitePlan("mlp_in@bwd.dB", narrow)),
+        default=base, bwd_default=widen_config(base), budget_bits=4.0)
+    q = PrecisionPlan.from_json(json.loads(json.dumps(p.to_json())))
+    assert q.phase_sites("bwd") == p.sites[1:]
+    pol = q.to_policy()
+    assert pol.lookup("mlp_in@bwd.dA") == narrow                # explicit
+    assert pol.lookup("mlp_gate@bwd.dA") == q.bwd_default       # fallback
+    assert pol.lookup("mlp_in") == GemmConfig(FP32, None, "native")
+
+
+def test_v2_document_missing_bwd_default_widens():
+    """A v2 doc with the key stripped must not let unassigned gradient GEMMs
+    inherit the (possibly narrow) forward default — loading synthesizes the
+    widened fallback exactly like the v1 migration does."""
+    from repro.core.dispatch import widen_config
+    d = _plan().to_json()
+    assert "bwd_default" not in d          # _plan() carries no bwd_default
+    q = PrecisionPlan.from_json(d)
+    assert q.bwd_default == widen_config(q.default)
+    assert q.to_policy().lookup("attn_qk@bwd.dA") == q.bwd_default
+    # and the in-memory plan (bwd_default=None) deploys the same fallback:
+    # to_policy and save->load->to_policy agree on every site
+    p = _plan()
+    assert p.to_policy().lookup("attn_qk@bwd.dA") == widen_config(p.default)
+
+
+def test_malformed_site_key_rejected():
+    d = _plan().to_json()
+    d["sites"][0]["site"] = "attn_qk@sideways.dC"
+    with pytest.raises(ValueError):
+        PrecisionPlan.from_json(d)
+
+
 def test_checked_in_fixture_loads_and_pays_for_itself():
     """The committed paper-MLP plan: valid schema, covers the model's GEMM
     sites, and its modeled energy undercuts the uniform 91-bit baseline."""

@@ -55,6 +55,30 @@ def test_calibrate_under_jit_scan():
     assert p.macs == 3 * 8 * 64 * 4
 
 
+def test_repeated_grad_calibrations_do_not_deadlock():
+    """Regression: ``_record`` must materialize incoming jax arrays BEFORE
+    taking the trace lock. Eager dispatch runs debug callbacks inline on the
+    main thread while compiled scan regions deliver theirs on the runtime's
+    host-callback worker; a device sync under the lock deadlocks the second
+    calibration (observed as refresh_plans hanging on its second arch)."""
+    for seed in (30, 31):
+        a, b = _operands(seed, m=4, k=16, n=4)
+        with calibrate() as tr, use_policy(MXU_FP32):
+            @jax.jit
+            def f(a, b):
+                def body(c, _):
+                    return c + gemm(a, b, site="t_lock"), None
+                out, _ = jax.lax.scan(body, jnp.zeros((4, 4)), None, length=2)
+                return out
+            jax.block_until_ready(f(a, b))        # worker-thread callbacks
+            jax.block_until_ready(jax.grad(       # eager + bwd callbacks
+                lambda x, y: gemm(x, y, site="t_lock").sum(),
+                argnums=(0, 1))(a, b))
+        assert tr.profile("t_lock").calls == 3
+        assert tr.profile("t_lock@bwd.dA").calls == 1
+        assert tr.profile("t_lock@bwd.dB").calls == 1
+
+
 def test_hook_removed_after_context():
     a, b = _operands(3)
     with calibrate() as tr, use_policy(MXU_FP32):
