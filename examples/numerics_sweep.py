@@ -15,21 +15,21 @@ Pipeline: (1) calibrate — one forward pass of the paper-MLP workload records
 per-site operand statistics; (2) enumerate + evaluate — each site's pruned
 candidate grid is replayed on its captured sample against a bit-exact FDP
 oracle; (3) greedy Pareto search meets the end-to-end error budget at
-minimum modeled energy (validated against the uniform ⟨30,30,-30⟩ policy);
+minimum modeled energy, accepted by the ``repro.workloads`` scenario zoo
+(logit fidelity vs the uniform ⟨30,30,-30⟩ policy + K-reorder
+reproducibility by default — see ``--validators``);
 (4) the plan serializes to JSON and loads back into a NumericsPolicy.
 """
 
 import argparse
 
-import numpy as np
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core.dispatch import FDP91, MXU_FP32, use_policy
-from repro.core.metrics import correct_bits
+from repro.core.dispatch import MXU_FP32, use_policy
 from repro.models import forward, init, LOCAL
 from repro.numerics import calibrate, load_plan, search
+from repro.workloads import WorkloadContext, build_validators
 
 
 def main(argv=None):
@@ -42,6 +42,10 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=None)
     ap.add_argument("--out", default=None,
                     help="write the PrecisionPlan JSON here")
+    ap.add_argument("--validators", default="logits,repro",
+                    help="comma list of repro.workloads validators accepting "
+                         "the plan end-to-end (this example calibrates "
+                         "forward-only, so the default set is forward-facing)")
     args = ap.parse_args(argv)
 
     cfg = get_config("paper-mlp")
@@ -61,20 +65,18 @@ def main(argv=None):
                                       remat="none"))
     print(trace.summary())
 
-    # (2)+(3) search with end-to-end validation vs the uniform FDP oracle
-    with use_policy(FDP91):
-        ref = np.asarray(forward(params, cfg, batch, LOCAL, remat="none"))
-
-    def validate(policy):
-        with use_policy(policy):
-            out = np.asarray(forward(params, cfg, batch, LOCAL, remat="none"))
-        return float(np.median(correct_bits(out, ref, cap=24)))
+    # (2)+(3) search, accepted end-to-end by the workload zoo
+    ctx = WorkloadContext(budget_bits=args.budget, cfg=cfg, params=params,
+                          batch=batch)
+    validators = build_validators(
+        [n for n in args.validators.split(",") if n and n != "none"], ctx)
 
     grid = (dict(widths=(32,)) if args.reduced
             else dict(widths=(24, 40, 64)))
-    print(f"\n== searching (budget {args.budget} bits) ==")
+    print(f"\n== searching (budget {args.budget} bits, validators "
+          f"{[v.name for v in validators]}) ==")
     res = search(trace, budget_bits=args.budget, name=cfg.name,
-                 validate=validate, **grid)
+                 validators=validators, **grid)
     print(res.describe())
 
     # per-site frontier detail (the Fig. 3 sweep, per call-site)

@@ -9,9 +9,12 @@ For every ``examples/plans/*.json`` (except MANIFEST.json) this
      every site key parses as a valid ``GemmSite`` (phase-qualified
      ``name@bwd.dA`` keys included) and that the backward-namespace fallback
      (``bwd_default`` -> ``*@bwd`` override) deploys,
-  2. cross-checks the MANIFEST entry (file listed, site list and energy
+  2. asserts the plan carries per-workload end-to-end validation evidence
+     (``meta.validation``, written by the ``repro.workloads`` validators at
+     search time) and that the MANIFEST entry summarizes the same scores,
+  3. cross-checks the MANIFEST entry (file listed, site list and energy
      bookkeeping in sync with the plan document),
-  3. dry-runs the plan's own architecture through the serving driver with
+  4. dry-runs the plan's own architecture through the serving driver with
      ``--precision-plan`` on the reduced config — a real forward + decode
      under the plan's numerics, so a plan whose formats/accumulators no
      longer load, dispatch, or produce tokens fails the lane.
@@ -79,7 +82,27 @@ def check_plan(path: str, manifest: dict, serve: bool = True) -> list:
     elif policy.lookup("__unlisted__@bwd.dA").tag() != plan.bwd_default.tag():
         errors.append("bwd_default not deployed as the *@bwd fallback")
 
-    # 2. MANIFEST consistency
+    # 2. every checked-in plan must carry the per-workload end-to-end
+    # evidence it was accepted on (repro.workloads reports serialized at
+    # search time) — a plan with no validation scores is a plan nobody ran
+    from repro.workloads import SUMMARY_KEYS
+    validation = plan.meta.get("validation") or {}
+    if not validation:
+        errors.append("plan meta carries no workload validation scores "
+                      "(searched without validators?)")
+    for name, rep in validation.items():
+        bad = [k for k in SUMMARY_KEYS if rep.get(k) is None]
+        if bad:
+            errors.append(f"validation[{name!r}] is missing {bad}")
+        elif not rep["passed"]:
+            # the zoo's contract is "accepted by the gate": a plan whose
+            # search exhausted its upgrades below threshold must be
+            # re-searched (wider grid / higher budget), not checked in
+            errors.append(
+                f"validation[{name!r}] recorded a FAILING score "
+                f"({rep['score']:.2f} < {rep['threshold']:g} {rep['units']})")
+
+    # 3. MANIFEST consistency
     entry = manifest.get("plans", {}).get(arch_id)
     if entry is None:
         errors.append("no MANIFEST entry")
@@ -92,8 +115,12 @@ def check_plan(path: str, manifest: dict, serve: bool = True) -> list:
                 errors.append(f"MANIFEST {key} out of sync")
         if entry.get("budget_bits") != plan.budget_bits:
             errors.append("MANIFEST budget_bits out of sync")
+        from repro.workloads import validation_summary
+        if entry.get("validation") != validation_summary(plan.meta):
+            errors.append("MANIFEST validation scores out of sync "
+                          "with plan meta")
 
-    # 3. dry-run the plan's arch under --precision-plan (one plan crashing
+    # 4. dry-run the plan's arch under --precision-plan (one plan crashing
     # must not mask whether the rest of the zoo still serves)
     if serve and not errors and entry is not None:
         from repro.launch import serve as serve_mod

@@ -18,17 +18,26 @@ tailors the whole zoo. Per architecture it
      summarizing modeled-energy savings and validated bits per arch — the
      artifacts the CI ``plan-zoo`` lane guards.
 
-``--phases fwd,bwd`` additionally calibrates through a ``value_and_grad``
-training-loss step, so every gradient GEMM is traced and searched under its
-own phase-qualified site (``attn_qk@bwd.dA``) and the emitted v2 plan carries
-backward assignments plus a modeled fwd/bwd energy split in the MANIFEST.
+``--phases fwd,bwd`` (the default) additionally calibrates through a
+``value_and_grad`` training-loss step, so every gradient GEMM is traced and
+searched under its own phase-qualified site (``attn_qk@bwd.dA``) and the
+emitted v2 plan carries backward assignments plus a modeled fwd/bwd energy
+split in the MANIFEST.
+
+End-to-end acceptance runs through the ``repro.workloads`` scenario zoo:
+``--validators grad,logits,repro`` (the default) scores every assembled
+policy on a real training-gradient step (vs the 91-bit-bwd reference), logit
+fidelity (vs the uniform 91-bit oracle — this is what ``validated_bits``
+records), and K-reorder bit-stability; failing workloads drive the greedy
+upgrade loop toward the sites they attribute the deficit to (the gradient
+workload upgrades ``@bwd`` sites). Every report is serialized into the plan
+(``meta.validation``) and summarized per arch in the MANIFEST. The hostile
+ill-conditioned ``solve`` workload is opt-in (``--validators solve,...``).
 
 Usage:
     PYTHONPATH=src python scripts/refresh_plans.py --reduced            # all
     PYTHONPATH=src python scripts/refresh_plans.py --only dbrx_132b --reduced
     PYTHONPATH=src python scripts/refresh_plans.py --reduced --jobs 3
-    PYTHONPATH=src python scripts/refresh_plans.py --only paper_mlp --reduced \
-        --phases fwd,bwd     # gradient sites get their own assignments
     PYTHONPATH=src python scripts/refresh_plans.py --only paper_mlp --reduced \
         --check     # recompute from the saved trace, compare to checked-in
 """
@@ -50,8 +59,16 @@ DEFAULT_OUT = os.path.join(os.path.dirname(__file__), os.pardir,
                            "examples", "plans")
 
 # Calibration shape: small enough for CPU, large enough that every scanned
-# site fires and operand extremes are representative.
-CAL_BATCH, CAL_SEQ, CAL_SEED = 2, 8, 0
+# site fires and operand extremes are representative. One source of truth
+# (repro.workloads.base) shared with WorkloadContext.for_model, so the CI
+# workloads smoke recomputes scores on the data the plans recorded them on.
+# NOTE: these feed the trace fingerprint — changing them invalidates every
+# saved trace. The import costs a few seconds of jax startup on --help-style
+# invocations (the package __init__ pulls it in); sweep children pay minutes
+# of calibration anyway, and one shared constant beats a silent CI-gate skew.
+from repro.workloads.base import (PROBE_BATCH as CAL_BATCH,          # noqa: E402
+                                  PROBE_SEQ as CAL_SEQ,
+                                  PROBE_SEED as CAL_SEED)
 
 
 def _alias_of(arch_id: str) -> str:
@@ -76,39 +93,81 @@ def _calibration_spec(cfg, reduced: bool, phases: tuple) -> dict:
     return spec
 
 
-def _calibration_batch(cfg, key, *, with_targets: bool = False):
-    import jax
-    import jax.numpy as jnp
-    ks = jax.random.split(key, 4)
-    batch = {"tokens": jax.random.randint(
-        ks[0], (CAL_BATCH, CAL_SEQ), 0, cfg.vocab_size)}
-    if cfg.family == "vlm":
-        batch["patches"] = 0.5 * jax.random.normal(
-            ks[1], (CAL_BATCH, cfg.n_patches, cfg.d_model), jnp.float32)
-    if cfg.family == "encdec":
-        batch["frames"] = 0.5 * jax.random.normal(
-            ks[2], (CAL_BATCH, cfg.enc_seq, cfg.d_model), jnp.float32)
-    if with_targets:
-        # the bwd calibration step runs the real training loss, so gradient
-        # sites see CE-shaped cotangents rather than synthetic ones
-        batch["targets"] = jax.random.randint(
-            ks[3], (CAL_BATCH, CAL_SEQ), 0, cfg.vocab_size)
-        batch["loss_mask"] = jnp.ones((CAL_BATCH, CAL_SEQ), jnp.float32)
-    return batch
+def _calibration_batch(cfg, *, with_targets: bool = False):
+    # the bwd calibration step (and the grad workload) runs the real training
+    # loss, so gradient sites see CE-shaped cotangents rather than synthetic
+    # ones; the recipe lives in repro.workloads so validators probe the same
+    # data distribution the plan was calibrated on
+    from repro.workloads import make_probe_batch
+    return make_probe_batch(cfg, batch_size=CAL_BATCH, seq=CAL_SEQ,
+                            seed=CAL_SEED + 1, with_targets=with_targets)
+
+
+class CheckDrift(Exception):
+    """--check failure with a readable per-key drift summary."""
+
+    def __init__(self, arch_id: str, lines: list):
+        self.arch_id = arch_id
+        self.lines = list(lines)
+        super().__init__(f"[{arch_id}] --check FAILED "
+                         f"({len(self.lines)} divergence(s))")
+
+
+def _drift_lines(recomputed, checked_in) -> list:
+    """Human-readable divergences between a recomputed plan and the
+    checked-in one: which site / score / key moved, and how."""
+    lines = []
+    got = {s.site: s.cfg.tag() for s in recomputed.sites}
+    want = {s.site: s.cfg.tag() for s in checked_in.sites}
+    for site in sorted(want.keys() - got.keys()):
+        lines.append(f"site {site}: checked-in has {want[site]}, "
+                     "recomputed search dropped it")
+    for site in sorted(got.keys() - want.keys()):
+        lines.append(f"site {site}: recomputed search added {got[site]}, "
+                     "not in checked-in plan")
+    for site in sorted(got.keys() & want.keys()):
+        if got[site] != want[site]:
+            lines.append(f"site {site}: recomputed {got[site]} != "
+                         f"checked-in {want[site]}")
+    if recomputed.budget_bits != checked_in.budget_bits:
+        lines.append(f"budget_bits: recomputed {recomputed.budget_bits} != "
+                     f"checked-in {checked_in.budget_bits}")
+    # end-to-end scores: exact equality is a same-machine property, so the
+    # gate allows a small cross-machine tolerance on native-backend noise
+    tol = 1.0
+    gv = recomputed.meta.get("validation", {})
+    wv = checked_in.meta.get("validation", {})
+    for name in sorted(gv.keys() ^ wv.keys()):
+        side = "recomputed" if name in gv else "checked-in"
+        lines.append(f"workload {name!r}: only the {side} plan has a score "
+                     "(validator sets differ?)")
+    for name in sorted(gv.keys() & wv.keys()):
+        g, w = gv[name].get("score"), wv[name].get("score")
+        if g is None or w is None:
+            if g != w:
+                lines.append(f"workload {name!r}: score {g!r} vs {w!r}")
+        elif abs(g - w) > tol:
+            lines.append(f"workload {name!r}: recomputed score {g:.2f} "
+                         f"drifted from checked-in {w:.2f} (> {tol} bits)")
+    for key in ("validated_bits",):
+        g, w = recomputed.meta.get(key), checked_in.meta.get(key)
+        if g is not None and w is not None and abs(g - w) > tol:
+            lines.append(f"{key}: recomputed {g:.2f} != checked-in {w:.2f} "
+                         f"(> {tol} bits)")
+    return lines
 
 
 def refresh_arch(arch_id: str, args) -> dict:
     """Calibrate (or reload the saved trace) + search one architecture;
     returns the plan's manifest entry. Writes the plan unless --check."""
-    import numpy as np
     import jax
 
     from repro.configs import get_config
-    from repro.core.dispatch import FDP91, MXU_FP32, use_policy
-    from repro.core.metrics import correct_bits
+    from repro.core.dispatch import MXU_FP32, use_policy
     from repro.models import LOCAL, forward, init
     from repro.numerics import (calibrate, config_fingerprint, load_plan,
                                 load_trace, search)
+    from repro.workloads import WorkloadContext, build_validators
 
     t0 = time.time()
     phases = tuple(args.phases.split(","))
@@ -122,7 +181,7 @@ def refresh_arch(arch_id: str, args) -> dict:
     plan_path = os.path.join(args.out, f"{arch_id}.json")
 
     params = init(cfg, jax.random.key(CAL_SEED))
-    batch = _calibration_batch(cfg, jax.random.key(CAL_SEED + 1))
+    batch = _calibration_batch(cfg)
 
     trace = None
     if os.path.exists(trace_path) and not args.recalibrate:
@@ -136,10 +195,9 @@ def refresh_arch(arch_id: str, args) -> dict:
         # the reproducibility gate's whole claim is "searched from the saved
         # trace, no recalibration" — a missing/stale trace must fail loudly,
         # not quietly recalibrate into a possibly-matching plan
-        raise SystemExit(
-            f"[{arch_id}] --check FAILED: no usable saved trace at "
-            f"{trace_path} (expected fingerprint {fp}) — refresh and "
-            f"commit the trace before gating on it")
+        raise CheckDrift(arch_id, [
+            f"no usable saved trace at {trace_path} (expected fingerprint "
+            f"{fp}) — refresh and commit the trace before gating on it"])
     if trace is None:
         print(f"[{arch_id}] calibrating {cfg.name} "
               f"(batch={CAL_BATCH}, seq={CAL_SEQ}, phases={phases})")
@@ -153,8 +211,7 @@ def refresh_arch(arch_id: str, args) -> dict:
                 # namespace's own exponent ranges / cancellation / samples
                 from repro.train.loop import make_loss_fn
                 loss_fn = make_loss_fn(cfg, LOCAL, remat="none")
-                grad_batch = _calibration_batch(
-                    cfg, jax.random.key(CAL_SEED + 1), with_targets=True)
+                grad_batch = _calibration_batch(cfg, with_targets=True)
                 jax.block_until_ready(jax.value_and_grad(
                     loss_fn, has_aux=True)(params, grad_batch))
         trace.save(trace_path, fingerprint=fp,
@@ -166,40 +223,42 @@ def refresh_arch(arch_id: str, args) -> dict:
         print(f"[{arch_id}] trace saved to {trace_path} "
               f"({len(trace.sites('fwd'))} fwd / {n_bwd} bwd sites)")
 
-    # end-to-end validation oracle: the paper's uniform 91-bit FDP policy
-    with use_policy(FDP91):
-        ref = np.asarray(forward(params, cfg, batch, LOCAL, remat="none"))
-
-    def validate(policy):
-        with use_policy(policy):
-            out = np.asarray(forward(params, cfg, batch, LOCAL,
-                                     remat="none"))
-        return float(np.median(correct_bits(out, ref, cap=24)))
+    # end-to-end acceptance: the workload zoo (grad vs 91-bit-bwd reference,
+    # logit fidelity vs the uniform oracle, K-reorder stability, ... per
+    # --validators), wired into the search's upgrade loop
+    names = [n for n in args.validators.split(",") if n and n != "none"]
+    validators = None
+    if names:
+        ctx = WorkloadContext(
+            budget_bits=args.budget, cfg=cfg, params=params, batch=batch,
+            grad_batch=_calibration_batch(cfg, with_targets=True),
+            dist=LOCAL, seed=CAL_SEED)
+        validators = build_validators(names, ctx)
 
     grid = dict(widths=(32,)) if args.reduced else dict(widths=(24, 40, 64))
     res = search(trace, budget_bits=args.budget, name=cfg.name,
-                 validate=validate, phases=phases, **grid)
+                 validators=validators, phases=phases, **grid)
     plan = res.plan
     plan.meta.update({
         "arch": arch_id, "arch_alias": _alias_of(arch_id),
         "family": cfg.family, "reduced": args.reduced,
         "phases": sorted(phases),
+        "validators": names,
         "fingerprint": fp,
         "trace": os.path.join("traces", f"{arch_id}.trace.json"),
     })
     print(res.describe())
 
     if args.check:
-        want = load_plan(plan_path)
-        got_sites = {s.site: s.cfg.tag() for s in plan.sites}
-        want_sites = {s.site: s.cfg.tag() for s in want.sites}
-        if got_sites != want_sites:
-            raise SystemExit(
-                f"[{arch_id}] --check FAILED: recomputed plan differs from "
-                f"{plan_path}\n  recomputed: {got_sites}\n"
-                f"  checked-in: {want_sites}")
+        try:
+            want = load_plan(plan_path)
+        except FileNotFoundError:
+            raise CheckDrift(arch_id, [f"no checked-in plan at {plan_path}"])
+        lines = _drift_lines(plan, want)
+        if lines:
+            raise CheckDrift(arch_id, lines)
         print(f"[{arch_id}] --check OK: recomputed plan matches {plan_path} "
-              f"({len(got_sites)} sites, {time.time() - t0:.0f}s)")
+              f"({len(plan.sites)} sites, {time.time() - t0:.0f}s)")
     else:
         plan.save(plan_path)
         print(f"[{arch_id}] plan written to {plan_path} "
@@ -208,6 +267,7 @@ def refresh_arch(arch_id: str, args) -> dict:
 
 
 def manifest_entry(arch_id: str, plan) -> dict:
+    from repro.workloads import validation_summary
     m = plan.meta
     return {
         "file": f"{arch_id}.json",
@@ -218,6 +278,10 @@ def manifest_entry(arch_id: str, plan) -> dict:
         "phases": m.get("phases", ["fwd"]),
         "budget_bits": plan.budget_bits,
         "validated_bits": m.get("validated_bits"),
+        # per-workload end-to-end scores (repro.workloads) this plan was
+        # accepted on, plus which searched sites the validators widened
+        "validation": validation_summary(m),
+        "validation_upgrades": m.get("validation_upgrades", []),
         "modeled_energy_j": m.get("modeled_energy_j"),
         # the measured fwd/bwd energy split (bwd is 0/absent for plans
         # searched before the phase-aware namespaces existed)
@@ -259,7 +323,7 @@ def _spawn(arch_id: str, args) -> tuple:
     global, so parallelism must be process-level, not threads)."""
     cmd = [sys.executable, os.path.abspath(__file__), "--only", arch_id,
            "--budget", str(args.budget), "--out", args.out, "--no-manifest",
-           "--phases", args.phases]
+           "--phases", args.phases, "--validators", args.validators]
     for flag in ("reduced", "recalibrate", "check"):
         if getattr(args, flag):
             cmd.append(f"--{flag}")
@@ -290,11 +354,15 @@ def main(argv=None):
                     help="skip archs whose plan file already exists")
     ap.add_argument("--recalibrate", action="store_true",
                     help="ignore saved traces, re-run calibration forwards")
-    ap.add_argument("--phases", default="fwd",
+    ap.add_argument("--phases", default="fwd,bwd",
                     help="comma list of site namespaces to calibrate+search: "
-                         "'fwd' (default, matches pre-phase traces) or "
-                         "'fwd,bwd' (adds a value_and_grad step so gradient "
-                         "GEMMs get their own traced, searched assignments)")
+                         "'fwd,bwd' (default: a value_and_grad step gives "
+                         "gradient GEMMs their own traced, searched "
+                         "assignments) or 'fwd' (matches pre-phase traces)")
+    ap.add_argument("--validators", default="grad,logits,repro",
+                    help="comma list of repro.workloads validators gating "
+                         "the search end-to-end ('none' disables; the "
+                         "ill-conditioned 'solve' workload is opt-in)")
     ap.add_argument("--jobs", type=int, default=1,
                     help="process-parallel arch fan-out")
     ap.add_argument("--check", action="store_true",
@@ -323,6 +391,7 @@ def main(argv=None):
     os.makedirs(args.out, exist_ok=True)
 
     failures = 0
+    drifted: list = []
     if args.jobs > 1 and len(archs) > 1:
         with ThreadPoolExecutor(max_workers=args.jobs) as ex:
             for arch_id, rc, dt in ex.map(lambda a: _spawn(a, args), archs):
@@ -334,14 +403,22 @@ def main(argv=None):
         for arch_id in archs:
             try:
                 refresh_arch(arch_id, args)
-            except SystemExit:
-                raise
+            except CheckDrift as e:         # readable per-arch drift report
+                failures += 1
+                drifted.append(e)
+                print(f"[{e.arch_id}] --check FAILED: recomputed plan "
+                      f"diverges from the checked-in one:")
+                for line in e.lines:
+                    print(f"    - {line}")
             except Exception as e:          # keep sweeping, report at exit
                 failures += 1
                 import traceback
                 print(f"[refresh] {arch_id}: FAIL {type(e).__name__}: {e}")
                 traceback.print_exc()
 
+    if drifted:
+        print(f"[check] {len(drifted)} arch(es) drifted: "
+              + ", ".join(e.arch_id for e in drifted))
     if not args.no_manifest and not args.check:
         rebuild_manifest(args.out)
     sys.exit(1 if failures else 0)

@@ -1,2 +1,2 @@
 from .synthetic import SyntheticLM, TokenBatch
-from .conditioned import gen_dot
+from .conditioned import gen_dot, gen_linear_system, residual_exact

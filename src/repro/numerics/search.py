@@ -172,6 +172,8 @@ class SearchResult:
     plan: PrecisionPlan
     decisions: dict[str, SiteDecision]
     validated_bits: Optional[float]
+    # workload name -> ValidationReport, when search ran with validators
+    reports: Optional[dict] = None
 
     def describe(self) -> str:
         lines = [f"precision plan {self.plan.name!r} "
@@ -184,7 +186,13 @@ class SearchResult:
         lines.append(f"  modeled energy {m['modeled_energy_j']:.3e} J vs "
                      f"uniform 91-bit {m['baseline_energy_j']:.3e} J "
                      f"({m['energy_vs_baseline']:.1%})")
-        if self.validated_bits is not None:
+        if self.reports:
+            for name in sorted(self.reports):
+                lines.append("  workload " + self.reports[name].describe())
+            ups = m.get("validation_upgrades", [])
+            if ups:
+                lines.append(f"  validator-driven upgrades: {', '.join(ups)}")
+        elif self.validated_bits is not None:
             lines.append(f"  end-to-end validated: {self.validated_bits:.1f} "
                          "correct bits vs oracle")
         return "\n".join(lines)
@@ -201,6 +209,7 @@ def search(trace: CalibrationTrace, budget_bits: float, *,
            margin_bits: float = 2.0,
            measure_latency: bool = False,
            validate: Optional[Callable[[NumericsPolicy], float]] = None,
+           validators: Optional[Sequence] = None,
            max_upgrades: int = 16,
            phases: Sequence[str] = ("fwd", "bwd"),
            upgrade_phases: Sequence[str] = ("fwd",)) -> SearchResult:
@@ -213,15 +222,31 @@ def search(trace: CalibrationTrace, budget_bits: float, *,
     traced phase gets its own per-site assignment. Unassigned bwd sites fall
     to the emitted plan's widened ``bwd_default``.
 
-    ``validate``, when given, maps an assembled NumericsPolicy to measured
-    end-to-end correct bits (e.g. a model forward vs the uniform-FDP oracle);
-    while it reports less than the budget, the currently-weakest site is
-    upgraded along its Pareto frontier (``max_upgrades`` cap). Only sites
-    whose phase is in ``upgrade_phases`` participate — the stock validator is
-    a *forward* pass, which backward assignments cannot influence, so
-    upgrading them there would burn the upgrade budget for nothing.
+    End-to-end validation comes in two flavors:
+
+    * ``validators`` — a sequence of ``repro.workloads`` Validators
+      (``run(policy) -> ValidationReport``). All of them run on the
+      assembled policy; while any reports below its threshold, the upgrade
+      loop spends one Pareto-frontier upgrade per iteration on the weakest
+      site that failing workload says it can see (its report's
+      ``site_attribution`` patterns, else the validator's declared phases) —
+      which is how a loss-gradient workload drives ``@bwd`` upgrades while a
+      logit probe drives forward ones. Every report lands in
+      ``plan.meta["validation"]`` (and the upgrade log in
+      ``meta["validation_upgrades"]``), so the plan carries the per-workload
+      evidence it was accepted on.
+    * ``validate`` — the legacy scalar hook: maps a policy to measured
+      end-to-end correct bits; while it reports less than the budget, the
+      weakest site whose phase is in ``upgrade_phases`` is upgraded
+      (forward-only by default, since a forward validator cannot see bwd
+      assignments).
+
+    ``max_upgrades`` caps either loop. Passing both flavors is an error.
     """
     phases = tuple(phases)
+    if validate is not None and validators:
+        raise ValueError("pass either validate= (legacy scalar hook) or "
+                         "validators= (workload zoo), not both")
     profiles = {s: p for s, p in trace.profiles().items()
                 if p.sample is not None
                 and dispatch.GemmSite.parse(s).phase in phases}
@@ -247,6 +272,7 @@ def search(trace: CalibrationTrace, budget_bits: float, *,
         return _plan_from_decisions(name, decisions, budget_bits, default)
 
     validated = None
+    reports = upgrades_log = None
     if validate is not None:
         up_phases = tuple(upgrade_phases)
         for _ in range(max_upgrades + 1):
@@ -260,14 +286,68 @@ def search(trace: CalibrationTrace, budget_bits: float, *,
                 break
             weakest = min(upgradable, key=lambda d: d.pick.error_bits)
             weakest.upgrade()
+    elif validators:
+        reports, upgrades_log = _run_validator_loop(
+            validators, decisions, assemble, max_upgrades)
 
     plan = assemble()
     if validated is not None:
         plan.meta["validated_bits"] = validated
+    if reports is not None:
+        plan.meta["validation"] = {n: r.to_json()
+                                   for n, r in sorted(reports.items())}
+        plan.meta["validation_upgrades"] = list(upgrades_log)
+        # validated_bits keeps its historical meaning — end-to-end forward
+        # correct bits vs the uniform oracle, i.e. the logit-fidelity
+        # workload's score. Other workloads score in other units (repro caps
+        # at 53 stability bits), so no stand-in: absent logits, it stays
+        # unset and the per-workload scores in meta.validation speak.
+        if "logits" in reports:
+            validated = reports["logits"].score
+            plan.meta["validated_bits"] = validated
     if getattr(trace, "fingerprint", None):
         # provenance: which persisted calibration this plan was searched from
         plan.meta["trace_fingerprint"] = trace.fingerprint
-    return SearchResult(plan, decisions, validated)
+    return SearchResult(plan, decisions, validated, reports=reports)
+
+
+def _run_validator_loop(validators, decisions, assemble, max_upgrades):
+    """Run the workload zoo on the assembled policy, spending Pareto-frontier
+    upgrades on sites the *failing* workloads attribute their deficit to.
+
+    One upgrade per iteration (the first failing validator in the caller's
+    order picks the weakest eligible site), and EVERY validator re-runs on
+    every iteration: an upgrade raises one site's accuracy but can regress an
+    orthogonal workload (e.g. a cheap bit-stable FDP point upgraded onto a
+    more-accurate native one loses K-reorder stability), so previously
+    passing reports cannot be assumed to stand. The loop always exits with
+    reports measured against the exact policy that ships.
+    """
+    reports: dict = {}
+    upgrades_log: list[str] = []
+    while True:
+        policy = assemble().to_policy()
+        for v in validators:
+            reports[v.name] = v.run(policy)
+        failing = [v for v in validators if not reports[v.name].passed]
+        if not failing or len(upgrades_log) >= max_upgrades:
+            break
+        target = None
+        for v in failing:
+            rep = reports[v.name]
+            eligible = [d for d in decisions.values() if d.can_upgrade()
+                        and v.eligible_site(d.site, rep)]
+            if eligible:
+                # weakest first — by the workload's own per-site attribution
+                # when it names exact sites, else by the search-time oracle
+                target = min(eligible, key=lambda d: rep.site_attribution.get(
+                    d.site, d.pick.error_bits))
+                break
+        if target is None:
+            break                      # failing, but nothing left to widen
+        target.upgrade()
+        upgrades_log.append(target.site)
+    return reports, upgrades_log
 
 
 def _plan_from_decisions(name, decisions, budget_bits,

@@ -1,0 +1,43 @@
+# repro.workloads — the end-to-end scenario zoo.
+#
+# The layer between the model zoo and the precision search: each workload is
+# a complete numerical scenario (ill-conditioned solve, training-loss
+# gradients, K-reorder reproducibility, logit fidelity) wrapped in a common
+# ``Validator`` protocol (``run(policy) -> ValidationReport``) that
+# ``repro.numerics.search`` consumes in place of its old hard-coded forward
+# validator — scores, pass thresholds, and per-site attribution the greedy
+# upgrade loop can act on (including, at last, ``@bwd`` sites).
+#
+#   base             - Validator / ValidationReport / registry /
+#                      WorkloadContext (model binding) / probe batches
+#   solve            - Ogita-Rump-Oishi dots + prescribed-condition linear
+#                      systems vs the exact oracle (paper Fig. 2 harness)
+#   gradients        - value_and_grad step vs the 91-bit-bwd reference
+#   inference        - logit correct-bits + top-1 vs the uniform 91-bit FDP
+#   reproducibility  - bit-stability of results under K-reduction reordering
+#
+# ``python -m repro.workloads --plan examples/plans/<arch>.json`` runs the
+# zoo against a checked-in plan (the CI smoke entry point).
+from .base import (PROBE_BATCH, PROBE_SEED, PROBE_SEQ, SUMMARY_KEYS,
+                   ValidationReport, Validator, WorkloadContext,
+                   available_workloads, build_validators, get_workload,
+                   make_probe_batch, probed_sites, register,
+                   validation_summary)
+from .gradients import LossGradient, bwd91_reference_policy
+from .inference import LogitFidelity
+from .reproducibility import KReorderStability
+from .solve import IllConditionedSolve
+
+# the plan-zoo refresh's default gate: model-bound end-to-end validators
+# (the opt-in "solve" workload joins via --validators solve,... — its
+# operand ranges are deliberately hostile to DNN-calibrated accumulators)
+DEFAULT_VALIDATORS = ("grad", "logits", "repro")
+
+__all__ = [
+    "PROBE_BATCH", "PROBE_SEED", "PROBE_SEQ", "SUMMARY_KEYS",
+    "ValidationReport", "Validator", "WorkloadContext",
+    "available_workloads", "build_validators", "get_workload",
+    "make_probe_batch", "probed_sites", "register", "validation_summary",
+    "LossGradient", "bwd91_reference_policy", "LogitFidelity",
+    "KReorderStability", "IllConditionedSolve", "DEFAULT_VALIDATORS",
+]

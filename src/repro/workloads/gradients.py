@@ -1,0 +1,151 @@
+"""Loss-gradient validator: what do the backward datapaths cost, end to end?
+
+The per-site search validates bwd assignments against a per-site oracle on a
+captured sample; this workload closes the loop the ROADMAP asked for — a real
+``value_and_grad`` training-loss step under the candidate policy, scored
+against the *91-bit-bwd reference*: the identical policy with every backward
+site (explicit assignments and the ``*@bwd`` fallback alike) forced onto the
+paper's ⟨30,30,-30⟩ exact accumulator. Forward configs are common to both
+runs, so forward error is common-mode and the score isolates precisely what
+the searched backward truncations cost the gradients. That is also why the
+attribution is ``{"*@bwd": score}``: this validator can only be fixed by
+widening backward sites, and the greedy upgrade loop now knows it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.metrics import correct_bits
+
+from .base import ValidationReport, Validator, WorkloadContext, register
+
+GRAD_CAP_BITS = 24.0
+
+
+def bwd91_reference_policy(policy):
+    """The policy with its entire backward namespace forced to the paper's
+    91-bit exact FDP — and *only* the backward namespace, so forward error
+    stays common-mode between candidate and reference: bwd-phase patterns
+    are rewritten in place (exact keys included — a ``*@bwd`` append would
+    lose to them on specificity), phase-``*`` patterns keep their config for
+    the forward half and get a higher-specificity ``name@bwd`` pin for the
+    backward half, and a ``*@bwd`` catch-all covers the rest."""
+    from repro.core.accumulator import AccumulatorSpec
+    from repro.core.dispatch import GemmConfig, _parse_pattern
+    from repro.core.formats import FP32
+
+    ref_cfg = GemmConfig(FP32, AccumulatorSpec.paper_91bit(), "simulate")
+    overrides = []
+    for pat, cfg in getattr(policy, "overrides", ()):
+        name, phase, _op = _parse_pattern(pat)
+        if phase == "bwd":
+            overrides.append((pat, ref_cfg))
+        else:
+            overrides.append((pat, cfg))
+            if phase == "*":
+                # name@bwd (specificity name+phase) outranks name@* for bwd
+                # lookups while leaving the pattern's fwd half untouched
+                overrides.append((f"{name}@bwd", ref_cfg))
+    overrides.append(("*@bwd", ref_cfg))
+    return dataclasses.replace(policy, overrides=tuple(overrides),
+                               name=f"{policy.name}+bwd91")
+
+
+@register
+class LossGradient(Validator):
+    """Correct bits (plus cosine similarity) of ``value_and_grad`` gradients
+    under the policy vs the 91-bit-bwd reference.
+
+    The score is the *worst parameter tensor's* median correct bits, not the
+    global median: a training step is only as good as its worst gradient (one
+    busted attention tensor ruins the update while the global median — fat
+    with healthy embedding/MLP gradients — still looks fine; on the reduced
+    paper-MLP the global median sits ~8 bits above the worst tensor). The
+    per-leaf breakdown ships in ``details["worst_leaves"]``."""
+
+    name = "grad"
+    phases = ("bwd",)
+
+    def __init__(self, cfg, params, grad_batch, *, dist=None,
+                 threshold: float = 10.0):
+        from repro.models import LOCAL
+
+        self.cfg = cfg
+        self.params = params
+        self.grad_batch = grad_batch
+        self.dist = dist or LOCAL
+        self.threshold = float(threshold)
+        # single-slot reference-gradient cache: the 91-bit-bwd reference
+        # depends only on the policy's forward configuration (its backward
+        # namespace is pinned), so the search's @bwd-only upgrade iterations
+        # reuse one reference instead of paying the slow simulated-FDP
+        # backward again. One slot, not a dict: only consecutive iterations
+        # ever share a key, and a dict would pin a param-sized float64
+        # gradient copy per forward upgrade for zero reuse.
+        self._ref_key = None
+        self._ref_val = None
+
+    @classmethod
+    def from_context(cls, ctx: WorkloadContext) -> "LossGradient":
+        ctx.require_model(cls.name)
+        if ctx.grad_batch is None:
+            raise ValueError("workload 'grad' needs ctx.grad_batch "
+                             "(a batch with targets/loss_mask)")
+        return cls(ctx.cfg, ctx.params, ctx.grad_batch, dist=ctx.dist,
+                   threshold=ctx.budget_bits)
+
+    def _grads(self, policy):
+        import jax
+        from jax.tree_util import keystr, tree_flatten_with_path
+
+        from repro.core.dispatch import use_policy
+        from repro.train.loop import make_loss_fn
+
+        loss_fn = make_loss_fn(self.cfg, self.dist, remat="none")
+        with use_policy(policy):
+            (loss, _aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                self.params, self.grad_batch)
+            jax.block_until_ready(grads)
+        leaves = [(keystr(path), np.asarray(g, np.float64).ravel())
+                  for path, g in tree_flatten_with_path(grads)[0]]
+        return float(loss), leaves
+
+    def run(self, policy) -> ValidationReport:
+        from repro.core.dispatch import _parse_pattern
+
+        # the reference is fully determined by the policy's non-bwd surface
+        # (its backward namespace is pinned to ref_cfg no matter what the
+        # policy's bwd patterns say), so bwd-only policy changes — exactly
+        # what the search's grad-driven upgrades produce — hit the cache
+        key = (policy.default.tag(),
+               tuple((pat, cfg.tag()) for pat, cfg in
+                     getattr(policy, "overrides", ())
+                     if _parse_pattern(pat)[1] != "bwd"))
+        if key != self._ref_key:
+            # value first, key last: a _grads failure must not register the
+            # new key over the previous policy's cached reference
+            self._ref_val = self._grads(bwd91_reference_policy(policy))
+            self._ref_key = key
+        loss_ref, ref = self._ref_val
+        loss_got, got = self._grads(policy)
+        per_leaf = {path: float(np.median(correct_bits(g, r,
+                                                       cap=GRAD_CAP_BITS)))
+                    for (path, g), (_, r) in zip(got, ref)}
+        worst = sorted(per_leaf, key=per_leaf.get)[:4]
+        score = per_leaf[worst[0]]
+        flat_g = np.concatenate([g for _, g in got])
+        flat_r = np.concatenate([r for _, r in ref])
+        denom = float(np.linalg.norm(flat_g) * np.linalg.norm(flat_r))
+        cosine = float(np.dot(flat_g, flat_r) / denom) if denom else 0.0
+        return ValidationReport(
+            workload=self.name, score=score, threshold=self.threshold,
+            site_attribution={"*@bwd": score},
+            details={"cosine": cosine,
+                     "median_bits": float(np.median(correct_bits(
+                         flat_g, flat_r, cap=GRAD_CAP_BITS))),
+                     "worst_leaves": {w: per_leaf[w] for w in worst},
+                     "loss": loss_got, "loss_ref": loss_ref,
+                     "n_leaves": len(per_leaf)})

@@ -1,0 +1,72 @@
+"""Inference-quality probe: logit fidelity vs the uniform 91-bit oracle.
+
+This is the plan zoo's historical end-to-end gate (the stock forward
+validator the search used to hard-code), promoted to a first-class workload:
+a real model forward under the candidate policy, scored in median correct
+bits of the logits against the paper's uniform ⟨30,30,-30⟩ FDP policy, with
+top-1 agreement (the paper's Fig. 3 proxy metric) reported alongside. Its
+score is what plans record as ``validated_bits``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.metrics import correct_bits, top1_agreement
+
+from .base import ValidationReport, Validator, WorkloadContext, register
+
+LOGIT_CAP_BITS = 24.0
+
+
+@register
+class LogitFidelity(Validator):
+
+    name = "logits"
+    phases = ("fwd",)
+
+    def __init__(self, cfg, params, batch, *, dist=None,
+                 threshold: float = 10.0):
+        from repro.models import LOCAL
+
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch
+        self.dist = dist or LOCAL
+        self.threshold = float(threshold)
+        self._ref = None                      # FDP91 logits, computed once
+
+    @classmethod
+    def from_context(cls, ctx: WorkloadContext) -> "LogitFidelity":
+        ctx.require_model(cls.name)
+        return cls(ctx.cfg, ctx.params, ctx.batch, dist=ctx.dist,
+                   threshold=ctx.budget_bits)
+
+    def _forward(self, policy):
+        import jax
+
+        from repro.core.dispatch import use_policy
+        from repro.models import forward
+
+        with use_policy(policy):
+            out = forward(self.params, self.cfg, self.batch, self.dist,
+                          remat="none")
+            jax.block_until_ready(out)
+        return np.asarray(out)
+
+    def reference(self):
+        from repro.core.dispatch import FDP91
+        if self._ref is None:
+            self._ref = self._forward(FDP91)
+        return self._ref
+
+    def run(self, policy) -> ValidationReport:
+        ref = self.reference()
+        got = self._forward(policy)
+        bits = correct_bits(got, ref, cap=LOGIT_CAP_BITS)
+        score = float(np.median(bits))
+        return ValidationReport(
+            workload=self.name, score=score, threshold=self.threshold,
+            details={"top1_agreement": top1_agreement(got, ref),
+                     "min_bits": float(np.min(bits)),
+                     "n_logits": int(got.size)})

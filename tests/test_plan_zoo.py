@@ -70,6 +70,27 @@ def test_manifest_lists_only_existing_files():
     assert set(_manifest()["plans"]) == on_disk
 
 
+@pytest.mark.parametrize("path", PLAN_PATHS,
+                         ids=[os.path.basename(p) for p in PLAN_PATHS])
+def test_every_plan_carries_workload_validation_scores(path):
+    """Every checked-in plan records the per-workload end-to-end evidence
+    (repro.workloads reports) it was accepted on, and the MANIFEST summary
+    matches the plan document."""
+    from repro.workloads import SUMMARY_KEYS, validation_summary
+    arch_id = os.path.basename(path)[:-len(".json")]
+    plan = load_plan(path)
+    validation = plan.meta.get("validation") or {}
+    assert validation, f"{arch_id} was searched without workload validators"
+    for name, rep in validation.items():
+        for key in SUMMARY_KEYS:
+            assert rep.get(key) is not None, (arch_id, name, key)
+    entry = _manifest()["plans"][arch_id]
+    assert entry.get("validation") == validation_summary(plan.meta), arch_id
+    # the grad workload ran for every arch: bwd assignments are end-to-end
+    # validated zoo-wide, not just per-site
+    assert "grad" in validation, arch_id
+
+
 @pytest.mark.parametrize("arch_id", ["dbrx_132b", "mamba2_1p3b"])
 def test_zoo_traces_reload_with_expert_and_scan_sites(arch_id):
     """The checked-in calibration traces carry the sites the ROADMAP asked

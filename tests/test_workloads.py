@@ -1,0 +1,285 @@
+"""repro.workloads: the end-to-end scenario zoo.
+
+Covers the Validator protocol + registry, determinism of seeded validators
+(bit-identical scores across runs, eager and jit), the ill-conditioned-solve
+acceptance property (a widened plan strictly outscores a truncated one), the
+91-bit-bwd reference construction, and the search integration — a failing
+gradient workload drives ``@bwd`` Pareto upgrades, and every report lands in
+the emitted plan's meta.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.accumulator import AccumulatorSpec
+from repro.core.dispatch import (FDP91, MXU_FP32, GemmConfig, NumericsPolicy,
+                                 use_policy)
+from repro.core.formats import FP32
+from repro.data.conditioned import gen_linear_system, residual_exact
+from repro.models import LOCAL, forward, init
+from repro.numerics import calibrate, search
+from repro.workloads import (DEFAULT_VALIDATORS, IllConditionedSolve,
+                             KReorderStability, LogitFidelity,
+                             ValidationReport, WorkloadContext,
+                             available_workloads, build_validators,
+                             bwd91_reference_policy, get_workload,
+                             probed_sites)
+
+BUDGET = 10.0
+
+
+def _policy(msb=30, lsb=-30, sites=("attn_qk", "mlp_in@bwd.dA")):
+    """A plan-shaped policy: exact site overrides + the *@bwd fallback."""
+    cfg = GemmConfig(FP32, AccumulatorSpec(ovf=30, msb=msb, lsb=lsb),
+                     "simulate")
+    overrides = tuple((s, cfg) for s in sites) + (("*@bwd", cfg),)
+    return NumericsPolicy(default=GemmConfig(), overrides=overrides,
+                          name="test")
+
+
+@pytest.fixture(scope="module")
+def mlp_ctx():
+    cfg = get_config("paper-mlp").reduced()
+    return WorkloadContext.for_model(cfg, budget_bits=BUDGET, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# registry + protocol
+# ---------------------------------------------------------------------------
+def test_registry_lists_the_four_scenarios():
+    assert {"solve", "grad", "logits", "repro"} <= set(available_workloads())
+    assert set(DEFAULT_VALIDATORS) <= set(available_workloads())
+    with pytest.raises(KeyError, match="unknown workload"):
+        get_workload("nope")
+
+
+def test_model_bound_workloads_refuse_bare_context():
+    with pytest.raises(ValueError, match="model-bound"):
+        build_validators(["grad"], WorkloadContext(budget_bits=BUDGET))
+    with pytest.raises(ValueError, match="model-bound"):
+        build_validators(["logits"], WorkloadContext(budget_bits=BUDGET))
+    # synthetic workloads build fine without a model
+    vs = build_validators(["solve", "repro"],
+                          WorkloadContext(budget_bits=BUDGET))
+    assert [v.name for v in vs] == ["solve", "repro"]
+    for v in vs:
+        assert v.threshold == BUDGET
+
+
+def test_report_json_round_trip_is_plain_data():
+    rep = ValidationReport(workload="x", score=np.float64(12.5),
+                           threshold=10.0,
+                           site_attribution={"a": np.float32(1.5)},
+                           details={"inf": float("inf"), "n": 3})
+    d = rep.to_json()
+    assert d["passed"] is True and d["score"] == 12.5
+    assert d["site_attribution"] == {"a": 1.5}
+    assert d["details"]["inf"] is None            # JSON-safe
+    import json
+    json.dumps(d)
+
+
+def test_probed_sites_are_the_exact_overrides():
+    pol = _policy(sites=("attn_qk", "mlp_in@bwd.dA"))
+    assert set(probed_sites(pol)) == {"attn_qk", "mlp_in@bwd.dA"}
+    assert probed_sites(MXU_FP32) == []
+
+
+# ---------------------------------------------------------------------------
+# determinism: seeded validators are bit-identical across runs, eager + jit
+# ---------------------------------------------------------------------------
+def test_synthetic_validators_are_deterministic():
+    pol = _policy()
+    for v in build_validators(["solve", "repro"],
+                              WorkloadContext(budget_bits=BUDGET)):
+        r1, r2 = v.run(pol), v.run(pol)
+        assert r1.score == r2.score                      # bit-identical
+        assert r1.site_attribution == r2.site_attribution
+
+
+def test_model_validators_are_deterministic(mlp_ctx):
+    for v in build_validators(["logits", "grad"], mlp_ctx):
+        r1, r2 = v.run(MXU_FP32), v.run(MXU_FP32)
+        assert r1.score == r2.score
+
+
+def test_solve_scores_match_under_jit():
+    """The FDP simulate backend scores identically whether the probe GEMM
+    runs eagerly or inside jit — workload scores don't depend on how the
+    deployment compiles the model."""
+    from repro.core.dispatch import gemm
+    pol = _policy(sites=("probe",))
+    v = IllConditionedSolve(conds=(1e6,), seed=0, threshold=BUDGET)
+    kind, cond, a, b, exact = v._cases[0]
+    eager = np.asarray(gemm(jnp.asarray(a), jnp.asarray(b), site="probe",
+                            policy=pol))
+    jitted = np.asarray(jax.jit(
+        lambda x, y: gemm(x, y, site="probe", policy=pol))(
+            jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_array_equal(eager, jitted)
+
+
+# ---------------------------------------------------------------------------
+# ill-conditioned solve: the acceptance property
+# ---------------------------------------------------------------------------
+def test_widened_plan_strictly_outscores_truncated_on_solve():
+    """The satellite acceptance test: same site, same format, same backend —
+    only the accumulator's lsb depth differs. The widened datapath must win
+    outright on ill-conditioned solves."""
+    v = IllConditionedSolve(conds=(1e4, 1e6), seed=0, threshold=BUDGET)
+    truncated = v.run(_policy(msb=30, lsb=-2, sites=("s",)))
+    widened = v.run(_policy(msb=30, lsb=-50, sites=("s",)))
+    assert widened.score > truncated.score
+    assert widened.score >= 20.0          # near-exact on f32 readout
+    assert not truncated.passed and widened.passed
+
+
+def test_solve_attribution_names_the_guilty_site():
+    cfg_ok = GemmConfig(FP32, AccumulatorSpec(ovf=30, msb=30, lsb=-50),
+                        "simulate")
+    cfg_bad = GemmConfig(FP32, AccumulatorSpec(ovf=30, msb=30, lsb=-2),
+                         "simulate")
+    pol = NumericsPolicy(default=GemmConfig(),
+                         overrides=(("good", cfg_ok), ("bad", cfg_bad)),
+                         name="mixed")
+    rep = IllConditionedSolve(conds=(1e6,), seed=0, threshold=BUDGET).run(pol)
+    assert set(rep.site_attribution) == {"good", "bad"}
+    assert rep.site_attribution["bad"] < rep.site_attribution["good"]
+    assert rep.details["weakest_site"] == "bad"
+    assert rep.score == rep.site_attribution["bad"]
+
+
+def test_residual_exact_reference():
+    """The exact-arithmetic residual reference: against the f32 rounding of
+    the exact row values it recovers exactly the rounding residue (sub-ulp,
+    nonzero), and against the exact values themselves it is zero."""
+    A, x, exact = gen_linear_system(16, 1e4, seed=7)
+    b32 = np.float32(exact)
+    r = residual_exact(A, x, b32)
+    np.testing.assert_allclose(r, exact - b32.astype(np.float64), rtol=1e-12)
+    assert np.any(r != 0.0)
+    assert np.max(np.abs(r)) < np.max(np.abs(exact)) * 2.0 ** -23
+
+
+def test_gen_linear_system_condition_sweeps():
+    """f32 row dots lose ~log2(cond) bits; exact arithmetic keeps them."""
+    bits = []
+    for cond in (1e4, 1e8):
+        A, x, exact = gen_linear_system(24, cond, seed=3)
+        got = (A @ x).astype(np.float64)
+        rel = np.abs(got - exact) / np.maximum(np.abs(exact), 1e-300)
+        bits.append(float(np.median(-np.log2(np.maximum(rel, 1e-300)))))
+        got64 = A.astype(np.float64) @ x.astype(np.float64)
+        rel64 = np.abs(got64 - exact) / np.maximum(np.abs(exact), 1e-300)
+        assert float(np.median(-np.log2(np.maximum(rel64, 1e-300)))) > 24.0
+    assert bits[0] > bits[1] + 8          # harder cond => fewer f32 bits
+
+
+# ---------------------------------------------------------------------------
+# reproducibility probe
+# ---------------------------------------------------------------------------
+def test_fdp_is_bit_stable_under_reordering_native_is_not():
+    v = KReorderStability(seed=0, threshold=BUDGET)
+    fdp = v.run(_policy(sites=("s",)))
+    assert fdp.score == 53.0              # bit-identical by construction
+    assert fdp.details["bit_identical_sites"] == 1
+    native = v.run(NumericsPolicy(GemmConfig(FP32, None, "native"),
+                                  overrides=(("s", GemmConfig(FP32, None,
+                                                              "native")),)))
+    assert native.score < 30.0            # some drift, some stability
+    assert native.score > 10.0
+
+
+# ---------------------------------------------------------------------------
+# gradient workload: the 91-bit-bwd reference
+# ---------------------------------------------------------------------------
+def test_bwd91_reference_rewrites_the_whole_bwd_namespace():
+    narrow = GemmConfig(FP32, AccumulatorSpec(ovf=4, msb=8, lsb=-4),
+                        "simulate")
+    pol = NumericsPolicy(
+        default=GemmConfig(),
+        overrides=(("attn_qk", narrow), ("attn_qk@bwd.dA", narrow),
+                   ("mlp_in@*", narrow), ("*@bwd", narrow)))
+    ref = bwd91_reference_policy(pol)
+    paper = AccumulatorSpec.paper_91bit()
+    # fwd lookups survive untouched — including the fwd half of a phase-*
+    # pattern (forward error must stay common-mode with the candidate)
+    assert ref.lookup("attn_qk").tag() == narrow.tag()
+    assert ref.lookup("mlp_in").tag() == narrow.tag()
+    # ...while every bwd lookup lands on the 91-bit exact FDP, phase-*
+    # patterns' backward halves included
+    for site in ("attn_qk@bwd.dA", "attn_qk@bwd.dB", "mlp_in@bwd.dA",
+                 "mlp_in@bwd.dB", "other@bwd.dB"):
+        got = ref.lookup(site)
+        assert got.acc == paper and got.mode == "simulate", site
+
+
+def test_grad_validator_scores_worst_leaf_and_attributes_bwd(mlp_ctx):
+    v = build_validators(["grad"], mlp_ctx)[0]
+    rep = v.run(MXU_FP32)
+    assert set(rep.site_attribution) == {"*@bwd"}
+    assert rep.details["n_leaves"] > 3
+    assert rep.score <= rep.details["median_bits"]
+    assert 0.99 <= rep.details["cosine"] <= 1.0
+    # eligibility: a failing grad report may only spend upgrades on bwd sites
+    failing = dataclasses.replace(rep, score=0.0)
+    assert v.eligible_site("attn_qk@bwd.dA", failing)
+    assert not v.eligible_site("attn_qk", failing)
+
+
+# ---------------------------------------------------------------------------
+# search integration
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_search_with_validators_upgrades_bwd_sites_and_records_reports(
+        mlp_ctx):
+    """The tentpole acceptance criterion: with the gradient validator
+    enabled, a fwd,bwd search on reduced paper-MLP performs at least one
+    ``@bwd`` site upgrade, and the emitted plan records every workload's
+    report."""
+    with calibrate() as trace, use_policy(MXU_FP32):
+        jax.block_until_ready(forward(mlp_ctx.params, mlp_ctx.cfg,
+                                      mlp_ctx.batch, LOCAL, remat="none"))
+        from repro.train.loop import make_loss_fn
+        loss_fn = make_loss_fn(mlp_ctx.cfg, LOCAL, remat="none")
+        jax.block_until_ready(jax.value_and_grad(loss_fn, has_aux=True)(
+            mlp_ctx.params, mlp_ctx.grad_batch))
+
+    validators = build_validators(["grad", "logits"], mlp_ctx)
+    res = search(trace, budget_bits=BUDGET, name="wl-test",
+                 validators=validators, widths=(32,),
+                 phases=("fwd", "bwd"))
+    meta = res.plan.meta
+    upgrades = meta["validation_upgrades"]
+    assert any("@bwd" in s for s in upgrades), upgrades
+    assert set(meta["validation"]) == {"grad", "logits"}
+    for rep in meta["validation"].values():
+        assert {"score", "threshold", "units", "passed"} <= set(rep)
+    assert res.reports["grad"].passed
+    assert meta["validated_bits"] == res.reports["logits"].score
+    # the recorded evidence reproduces against the shipped policy
+    rerun = validators[0].run(res.plan.to_policy())
+    assert rerun.score == res.reports["grad"].score
+
+
+def test_search_rejects_both_validation_flavors(mlp_ctx):
+    with calibrate() as trace, use_policy(MXU_FP32):
+        jax.block_until_ready(forward(mlp_ctx.params, mlp_ctx.cfg,
+                                      mlp_ctx.batch, LOCAL, remat="none"))
+    with pytest.raises(ValueError, match="not both"):
+        search(trace, budget_bits=BUDGET, validate=lambda p: 24.0,
+               validators=build_validators(["repro"],
+                                           WorkloadContext()))
+
+
+def test_logit_fidelity_matches_oracle_semantics(mlp_ctx):
+    v = build_validators(["logits"], mlp_ctx)[0]
+    rep = v.run(FDP91)
+    assert rep.score == 24.0              # the oracle agrees with itself
+    assert rep.details["top1_agreement"] == 1.0
+    assert isinstance(v, LogitFidelity)
