@@ -2,6 +2,11 @@
 checkpointing and fault-tolerant restart, then greedy-decode from it.
 
     PYTHONPATH=src python examples/train_lm.py [--steps 200]
+
+Plan-under-mesh runs are drivable from the CLI:
+
+    PYTHONPATH=src python examples/train_lm.py --mesh 2x4 --profile fsdp \
+        --precision-plan plans/zoo/<arch>/<plan>.json
 """
 
 import argparse
@@ -22,11 +27,37 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--precision-plan", default=None,
+                    help="train under a repro.numerics PrecisionPlan JSON")
+    ap.add_argument("--mesh", default=None,
+                    help="RxC (data x model) device mesh, e.g. 2x4")
+    ap.add_argument("--profile", default="fsdp",
+                    choices=["fsdp", "ddp", "decode_tp"],
+                    help="sharding profile when --mesh is set")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
     opt = adamw(lr=cosine_schedule(3e-3, warmup=20, total=args.steps))
-    step_fn = make_train_step(cfg, opt, LOCAL, remat="none", donate=False)
+    policy = None
+    if args.precision_plan:
+        from repro.core.dispatch import policy_from_plan
+        policy = policy_from_plan(args.precision_plan)
+    dist, place = LOCAL, None
+    if args.mesh:
+        from repro.launch import sharding as shd
+        mesh = shd.make_mesh(args.mesh)
+        dist = shd.distribution_for(mesh, args.profile,
+                                    numerics_policy=policy)
+
+        def place(carry):
+            params, opt_state = carry
+            ps = shd.param_shardings(cfg, params, mesh, profile=args.profile)
+            oss = shd.opt_state_shardings(cfg, opt_state, ps, mesh,
+                                          profile=args.profile)
+            return jax.device_put(params, ps), jax.device_put(opt_state, oss)
+
+    step_fn = make_train_step(cfg, opt, dist, remat="none", donate=False,
+                              numerics_policy=policy)
     ds = SyntheticLM(cfg.vocab_size, seq_len=64, global_batch=16, seed=0)
 
     def data(step):
@@ -36,7 +67,8 @@ def main():
 
     ckpt = "/tmp/repro_example_ckpt"
     shutil.rmtree(ckpt, ignore_errors=True)
-    trainer = Trainer(cfg, opt, data, step_fn, ckpt, save_every=50)
+    trainer = Trainer(cfg, opt, data, step_fn, ckpt, save_every=50,
+                      place_state=place)
     params, _ = trainer.run(args.steps)
     losses = [m["loss"] for m in trainer.metrics_log]
     print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} "

@@ -101,6 +101,19 @@ def check_plan(path: str, manifest: dict, serve: bool = True) -> list:
             errors.append(
                 f"validation[{name!r}] recorded a FAILING score "
                 f"({rep['score']:.2f} < {rep['threshold']:g} {rep['units']})")
+        # mesh provenance: a report may record the device-mesh shape(s) its
+        # validation ran under ("2x4", or "1x8,2x4,8x1" for the reshape
+        # sweep). Absent = single-device — the historical default, tolerated
+        # for every pre-mesh zoo entry. Present, it must be well-formed.
+        mesh = rep.get("mesh")
+        if mesh is not None:
+            from repro.launch.sharding import parse_mesh
+            try:
+                for shape in str(mesh).split(","):
+                    parse_mesh(shape)
+            except ValueError as e:
+                errors.append(f"validation[{name!r}] mesh provenance "
+                              f"{mesh!r} does not parse: {e}")
 
     # 3. MANIFEST consistency
     entry = manifest.get("plans", {}).get(arch_id)

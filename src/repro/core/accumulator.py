@@ -343,6 +343,20 @@ def add(spec: AccumulatorSpec, acc: Array, contributions: Array) -> Array:
     return acc + contributions
 
 
+def merge_states(spec: AccumulatorSpec, states: Array, axis: int = 0) -> Array:
+    """Merge carry-normalized partial accumulator states (e.g. per-K-shard
+    registers from ``fdp.fdp_gemm_limbs``) into one normalized register.
+
+    Integer limb addition is exact, associative and commutative, so the
+    merged register is bit-identical to accumulating all products on one
+    device — for ANY partition of the reduction and ANY merge order. This is
+    the single-host form of ``repro.parallel.collectives.fdp_psum``. Up to
+    SAFE_CHUNK normalized states may be merged in one call (normalized digit
+    magnitudes are < 2^16; int32 headroom covers 2^13 of them)."""
+    assert states.shape[axis] <= SAFE_CHUNK
+    return carry_normalize(spec, jnp.sum(states, axis=axis))
+
+
 def to_float(spec: AccumulatorSpec, limbs: Array, out_precision: int = 24) -> Array:
     """Round the accumulator ONCE to a float (RNE at ``out_precision`` bits)
     and return f32. ``limbs`` must be carry-normalized. Exact for

@@ -515,10 +515,54 @@ def _unbroadcast(x: Array, shape: tuple) -> Array:
     return x
 
 
+# -- sharded contraction: cross-device reduction under the site's spec ------
+def _execute_reduce(cfg: GemmConfig, a: Array, b: Array, axis_name) -> Array:
+    """One K-sharded matmul: local partial contraction + cross-device
+    reduction over ``axis_name``, under a resolved GemmConfig.
+
+    native mode reduces the local f32 partials with a float psum (order-
+    dependent, like any stock all-reduce). FDP modes reduce the accumulator
+    *register*: local limbs from ``fdp.fdp_gemm_limbs``, an exact integer
+    ``fdp_psum`` across devices, then the single read-out rounding — so the
+    sharded result is bit-identical to the unsharded ``fdp_gemm``, for any
+    mesh shape or reduction order (the paper's property lifted to the
+    collective layer). pallas mode routes its cross-device reduction through
+    the same simulate limb path: the Pallas kernel computes final floats, not
+    registers, and the two are validated bit-identical — the limb psum is the
+    semantics both implement.
+    """
+    if cfg.mode == "native":
+        return jax.lax.psum(_execute(cfg, a, b), axis_name)
+
+    if a.ndim != 2 or b.ndim != 2:
+        raise NotImplementedError(
+            "sharded FDP contraction (reduce_axis=...) supports 2-D operands")
+    if isinstance(cfg.fmt, FloatFormat):
+        a, b = cfg.fmt.quantize(a), cfg.fmt.quantize(b)
+    from . import fdp
+    from repro.parallel.collectives import fdp_psum  # deferred: imports us
+    limbs = fdp.fdp_gemm_limbs(a, b, cfg.acc, cfg.fmt)
+    return _acc_to_float(cfg.acc, fdp_psum(limbs, axis_name, cfg.acc))
+
+
+def _acc_to_float(spec: AccumulatorSpec, limbs: Array) -> Array:
+    from . import accumulator as acc_mod
+    return acc_mod.to_float(spec, limbs)
+
+
+def _dispatch_reduce(site: GemmSite, cfg: GemmConfig, a: Array, b: Array,
+                     axis_name) -> Array:
+    _note_site(site.key)
+    out = _execute_reduce(cfg, a, b, axis_name)
+    return _maybe_trace(site.key, cfg, a, b, out)
+
+
 # -- gemm: policy-dispatched matmul with phase-aware gradient dispatch ------
 @partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _gemm_vjp(ctx, a, b):
-    site, pol, plan = ctx
+    site, pol, plan, reduce_axis = ctx
+    if reduce_axis is not None:
+        return _dispatch_reduce(site, pol.lookup(site), a, b, reduce_axis)
     return _dispatch(site, pol.lookup(site), a, b, plan=plan)
 
 
@@ -531,8 +575,13 @@ def _gemm_vjp_bwd(ctx, res, g):
     dL/dA = G·Bᵀ under ``<site>@bwd.dA`` and dL/dB = Aᵀ·G under
     ``<site>@bwd.dB``. The policy captured at the forward call resolves both
     (deterministic: fwd and bwd of one computation always agree on the
-    policy, even if the ambient context changed between them)."""
-    site, pol, _plan = ctx
+    policy, even if the ambient context changed between them).
+
+    A K-sharded forward (``reduce_axis`` set) needs NO backward collectives:
+    with the cotangent g replicated (the psum output is), dA_loc = G·B_locᵀ
+    and dB_loc = A_locᵀ·G are already exactly the local shards of the full
+    gradients — so both backward GEMMs dispatch as ordinary local sites."""
+    site, pol, _plan, _reduce_axis = ctx
     a, b = res
     # jnp.matmul 1-D promotion: lift to 2-D, compute, drop the unit dims.
     # Insert the N axis before the M axis so the 1-D x 1-D (vector dot)
@@ -569,7 +618,8 @@ _gemm_vjp.defvjp(_gemm_vjp_fwd, _gemm_vjp_bwd)
 
 def gemm(a: Array, b: Array, *, site: Union[str, GemmSite] = "generic",
          policy: Optional[NumericsPolicy] = None,
-         plan: Optional[GemmPlan] = None) -> Array:
+         plan: Optional[GemmPlan] = None,
+         reduce_axis=None) -> Array:
     """Policy-dispatched matmul. Contracts a's last dim with b's second-to-last
     (jnp.matmul semantics). Output f32 (simulate/pallas) or f32/bf16 (native,
     preferred_element_type=f32 then cast by caller if desired).
@@ -578,9 +628,16 @@ def gemm(a: Array, b: Array, *, site: Union[str, GemmSite] = "generic",
     ``<site>@bwd.dA`` / ``<site>@bwd.dB`` under the same policy (see
     ``_gemm_vjp_bwd``). ``plan`` overrides the cached/heuristic block sizes
     for the forward call (pallas mode only; backward calls resolve their own).
+
+    ``reduce_axis`` makes the contraction *sharding-aware*: inside
+    shard_map/pmap with the K dim sharded over that mesh axis, each device
+    contracts its local K-shard and the cross-device reduction runs under the
+    site's resolved config — FDP sites through the exact limb-summed
+    ``fdp_psum`` (bit-identical to single-device), native sites through a
+    plain float psum. The output is replicated over ``reduce_axis``.
     """
     pol = policy or current_policy()
-    return _gemm_vjp((GemmSite.parse(site), pol, plan), a, b)
+    return _gemm_vjp((GemmSite.parse(site), pol, plan, reduce_axis), a, b)
 
 
 # -- grouped attention einsums ----------------------------------------------

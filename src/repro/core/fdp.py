@@ -81,13 +81,22 @@ def _reduce_contribs(spec: AccumulatorSpec, contrib: Array, axis: int) -> Array:
 
 
 @partial(jax.jit, static_argnums=(2, 3))
-def fdp_gemm(a: Array, b: Array, spec: AccumulatorSpec,
-             fmt: FloatFormat | PositFormat = FP32) -> Array:
-    """GEMM with FDP accumulation: (M,K) @ (K,N) -> (M,N) f32.
+def fdp_gemm_limbs(a: Array, b: Array, spec: AccumulatorSpec,
+                   fmt: FloatFormat | PositFormat = FP32) -> Array:
+    """The accumulator register of a GEMM: (M,K) @ (K,N) -> (M,N,L) int32
+    carry-normalized limbs, with NO read-out rounding applied.
 
-    Memory note: materializes per-K limb contributions in K-chunks of size
-    min(K, SAFE_CHUNK); intended for numerics experiments (simulation mode),
-    not as the production fast path.
+    This is the *partial-K reduction state*: because limb addition is exact
+    integer arithmetic, the register of a full-K GEMM equals the limb-wise sum
+    of the registers of any K-partition — ``carry_normalize(spec, Σ_k
+    fdp_gemm_limbs(a_k, b_k))`` is bit-identical to
+    ``fdp_gemm_limbs(a, b)`` for every split. That is what lets a K-sharded
+    contraction reduce across devices through an integer ``psum`` of limbs
+    (``repro.parallel.collectives.fdp_psum``) and land on exactly the bits a
+    single device would produce. Up to SAFE_CHUNK normalized partial states
+    may be summed before the next ``carry_normalize`` (digit magnitudes are
+    < 2^16 after normalization; int32 headroom covers 2^13 of them — far more
+    devices than any mesh).
     """
     assert a.ndim == 2 and b.ndim == 2 and a.shape[1] == b.shape[0]
     M, K = a.shape
@@ -123,7 +132,21 @@ def fdp_gemm(a: Array, b: Array, spec: AccumulatorSpec,
 
     init = jnp.zeros((M, N, L), jnp.int32)
     out, _ = jax.lax.scan(step, init, (da_c, db_c))
-    return acc.to_float(spec, out)
+    return out
+
+
+@partial(jax.jit, static_argnums=(2, 3))
+def fdp_gemm(a: Array, b: Array, spec: AccumulatorSpec,
+             fmt: FloatFormat | PositFormat = FP32) -> Array:
+    """GEMM with FDP accumulation: (M,K) @ (K,N) -> (M,N) f32.
+
+    Memory note: materializes per-K limb contributions in K-chunks of size
+    min(K, SAFE_CHUNK); intended for numerics experiments (simulation mode),
+    not as the production fast path. ``fdp_gemm_limbs`` is the same
+    computation stopped before the single read-out rounding — the partial-K
+    state a sharded reduction merges across devices.
+    """
+    return acc.to_float(spec, fdp_gemm_limbs(a, b, spec, fmt))
 
 
 def quantize_products(a: Array, b: Array, spec: AccumulatorSpec,

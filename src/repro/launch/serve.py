@@ -59,6 +59,11 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--precision-plan", default=None,
                     help="serve under a repro.numerics PrecisionPlan JSON")
+    ap.add_argument("--mesh", default=None,
+                    help="RxC (data x model) device mesh, e.g. 2x4")
+    ap.add_argument("--profile", default="decode_tp",
+                    choices=["fsdp", "ddp", "decode_tp"],
+                    help="sharding profile when --mesh is set")
     ap.add_argument("--engine", default="simple",
                     choices=["simple", "continuous"],
                     help="simple whole-batch decode, or the fixed-slot "
@@ -74,6 +79,17 @@ def main(argv=None):
                                  cfg.vocab_size)
     policy = (policy_from_plan(args.precision_plan)
               if args.precision_plan else None)
+    dist = LOCAL
+    if args.mesh:
+        if args.engine == "continuous":
+            raise SystemExit("--mesh is supported with --engine simple only")
+        from repro.launch import sharding as shd
+        mesh = shd.make_mesh(args.mesh)
+        dist = shd.distribution_for(mesh, args.profile,
+                                    numerics_policy=policy)
+        params = jax.device_put(
+            params, shd.param_shardings(cfg, params, mesh,
+                                        profile=args.profile))
     t0 = time.time()
     if args.engine == "continuous":
         from repro.launch.batching import ContinuousBatcher, Request
@@ -96,7 +112,7 @@ def main(argv=None):
         ctx = use_policy(policy) if policy is not None \
             else contextlib.nullcontext()
         with ctx:
-            toks = serve(cfg, params, prompts, args.gen)
+            toks = serve(cfg, params, prompts, args.gen, dist=dist)
     dt = time.time() - t0
     plan_note = f" plan={args.precision_plan}" if args.precision_plan else ""
     print(f"[serve] {args.arch}: engine={args.engine} batch={args.batch} "

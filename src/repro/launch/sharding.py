@@ -18,6 +18,42 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+PROFILES = ("fsdp", "ddp", "decode_tp")
+
+
+def parse_mesh(spec: str) -> tuple:
+    """Parse an ``RxC`` CLI mesh spec ("2x4" -> (2, 4); "8" -> (8, 1))."""
+    parts = spec.lower().replace("×", "x").split("x")
+    if len(parts) == 1:
+        parts = parts + ["1"]
+    if len(parts) != 2 or not all(p.strip().isdigit() for p in parts):
+        raise ValueError(f"bad mesh spec {spec!r}; expected RxC like 2x4")
+    return int(parts[0]), int(parts[1])
+
+
+def make_mesh(shape) -> jax.sharding.Mesh:
+    """(data, model) mesh over the available devices; shape may be a
+    ``parse_mesh`` tuple or an ``RxC`` string."""
+    if isinstance(shape, str):
+        shape = parse_mesh(shape)
+    r, c = shape
+    n = jax.device_count()
+    if r * c != n:
+        raise ValueError(f"mesh {r}x{c} wants {r * c} devices, have {n}")
+    return jax.make_mesh((r, c), ("data", "model"))
+
+
+def distribution_for(mesh, profile: str = "fsdp", numerics_policy=None):
+    """The Distribution a launch profile runs the model under, with the
+    deployed plan's NumericsPolicy riding along (threaded into shard_map'd
+    train/serve steps by make_train_step / serve)."""
+    from repro.models.layers import Distribution
+    if profile not in PROFILES:
+        raise ValueError(f"unknown profile {profile!r}; one of {PROFILES}")
+    return Distribution(mesh=mesh, dp_axes=("data",), tp_axis="model",
+                        joint_tp=profile == "decode_tp",
+                        numerics_policy=numerics_policy)
+
 
 def _leaf_spec(path: str, ndim: int, extra_lead: int) -> P:
     """PartitionSpec for a parameter leaf; ``extra_lead`` = # stacked layer

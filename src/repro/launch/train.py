@@ -41,6 +41,11 @@ def main(argv=None):
                     help="fixed-point (order-invariant) grad accumulation")
     ap.add_argument("--precision-plan", default=None,
                     help="train under a repro.numerics PrecisionPlan JSON")
+    ap.add_argument("--mesh", default=None,
+                    help="RxC (data x model) device mesh, e.g. 2x4")
+    ap.add_argument("--profile", default="fsdp",
+                    choices=["fsdp", "ddp", "decode_tp"],
+                    help="sharding profile when --mesh is set")
     ap.add_argument("--log", default=None)
     args = ap.parse_args(argv)
 
@@ -51,7 +56,21 @@ def main(argv=None):
     fdp_spec = AccumulatorSpec(ovf=10, msb=10, lsb=-20) if args.fdp_grad else None
     policy = (policy_from_plan(args.precision_plan)
               if args.precision_plan else None)
-    step_fn = make_train_step(cfg, opt, LOCAL, remat="none",
+    dist, place = LOCAL, None
+    if args.mesh:
+        from repro.launch import sharding as shd
+        mesh = shd.make_mesh(args.mesh)
+        dist = shd.distribution_for(mesh, args.profile,
+                                    numerics_policy=policy)
+
+        def place(carry):
+            params, opt_state = carry
+            ps = shd.param_shardings(cfg, params, mesh, profile=args.profile)
+            oss = shd.opt_state_shardings(cfg, opt_state, ps, mesh,
+                                          profile=args.profile)
+            return jax.device_put(params, ps), jax.device_put(opt_state, oss)
+
+    step_fn = make_train_step(cfg, opt, dist, remat="none",
                               microbatches=args.microbatches,
                               fdp_grad_spec=fdp_spec, donate=False,
                               numerics_policy=policy)
@@ -70,7 +89,7 @@ def main(argv=None):
         return batch
 
     trainer = Trainer(cfg, opt, data, step_fn, args.ckpt,
-                      save_every=args.save_every)
+                      save_every=args.save_every, place_state=place)
     # the step carries the policy itself (make_train_step numerics_policy);
     # keep the ambient context too so any dispatch outside the jitted step
     # (debug probes, future eval hooks) agrees with it.

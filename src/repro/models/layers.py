@@ -40,6 +40,10 @@ class Distribution:
     # weights are sharded over the JOINT (dp..., tp) axes and activations
     # replicated; moe_block psums over all axes instead of gathering weights.
     joint_tp: bool = False
+    # NumericsPolicy riding with the distribution: launch profiles carry the
+    # deployed plan's policy here so make_train_step / serve pick it up
+    # without a separate argument (None = caller's ambient policy).
+    numerics_policy: object = None
 
     @property
     def dp(self):

@@ -14,13 +14,49 @@ compression: see ``CompressedGradReducer``.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import accumulator as acc
 from repro.core.accumulator import AccumulatorSpec
+from repro.parallel.compat import axis_size
+
+_VALIDATE_OVERFLOW = False
+
+
+@contextlib.contextmanager
+def validate_overflow(enabled: bool = True):
+    """Debug/validation mode: a quantized collective payload that would
+    saturate ``spec.width`` raises OverflowError instead of silently clipping
+    (clipping breaks the 'same bits as single device' contract)."""
+    global _VALIDATE_OVERFLOW
+    prev = _VALIDATE_OVERFLOW
+    _VALIDATE_OVERFLOW = enabled
+    try:
+        yield
+    finally:
+        _VALIDATE_OVERFLOW = prev
+
+
+def _raise_on_saturation(saturated) -> None:
+    if saturated:
+        raise OverflowError(
+            "quantized collective payload saturates spec.width — the clipped "
+            "reduction would not match single-device bits; widen the spec "
+            "(ovf/msb) or rescale the payload")
+
+
+def _check_overflow(y: jax.Array, lim: float) -> None:
+    """Under ``validate_overflow()``: raise if |y| exceeds the signed range.
+    Works both eagerly and under trace (via debug.callback)."""
+    if not _VALIDATE_OVERFLOW:
+        return
+    saturated = jnp.any(jnp.abs(y) > lim)
+    jax.debug.callback(_raise_on_saturation, saturated)
 
 
 def _grid_quantize(x: jax.Array, lsb: int, width: int, stochastic_key=None):
@@ -32,6 +68,7 @@ def _grid_quantize(x: jax.Array, lsb: int, width: int, stochastic_key=None):
     else:
         y = jnp.round(y)
     lim = 2.0 ** (width - 1) - 1
+    _check_overflow(y, lim)
     return jnp.clip(y, -lim, lim).astype(jnp.int32)
 
 
@@ -64,8 +101,34 @@ def reproducible_psum(x: jax.Array, axis_name: str, spec: AccumulatorSpec,
     s = jax.lax.psum(q, axis_name)
     out = _grid_dequantize(s, spec.lsb, x.dtype)
     if mean:
-        out = out / jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+        out = out / axis_size(axis_name)
     return out
+
+
+def fdp_psum(limbs: jax.Array, axis_name, spec: AccumulatorSpec) -> jax.Array:
+    """All-reduce of FDP accumulator registers in exact integer limb space.
+
+    ``limbs`` is a carry-normalized partial-K state (trailing dim =
+    ``spec.num_limbs``), e.g. from ``repro.core.fdp.fdp_gemm_limbs`` on a
+    local K-shard, or any per-device exact partial accumulation. Integer limb
+    addition is exact, associative and commutative, so the psum followed by
+    one ``carry_normalize`` is bit-identical to accumulating everything on a
+    single device — for ANY reduction order, ring/tree topology, or mesh
+    factorization. No dequantized grid is involved: this reduces the
+    *register itself*, so a K-sharded FDP GEMM lands on exactly the bits
+    ``fdp_gemm`` would produce unsharded.
+
+    Headroom: normalized digits 0..L-2 are in [0, 2^16) and the signed top
+    limb carries the rest, so up to SAFE_CHUNK (2^13) device contributions
+    sum without int32 digit overflow; top-limb int32 wrap is congruent to the
+    register's own 2^ovf+msb wrap, preserving wrap-mode semantics. Call inside
+    shard_map/pmap with ``axis_name`` bound.
+    """
+    assert limbs.shape[-1] == spec.num_limbs, (
+        f"limb register has {limbs.shape[-1]} limbs, spec wants "
+        f"{spec.num_limbs}")
+    s = jax.lax.psum(limbs, axis_name)
+    return acc.carry_normalize(spec, s)
 
 
 @dataclasses.dataclass
@@ -88,9 +151,9 @@ class CompressedGradReducer:
             sent = _grid_dequantize(q, self.spec.lsb)
             new_r = g32 - sent
             red = jax.lax.psum(q, self.axis_name)
-            n = jax.lax.psum(jnp.ones((), jnp.float32), self.axis_name)
             return (_grid_dequantize(red, self.spec.lsb) / n).astype(g.dtype), new_r
 
+        n = axis_size(self.axis_name)
         flat_g, td = jax.tree.flatten(grads)
         flat_r = jax.tree.leaves(residual)
         out = [one(g, r) for g, r in zip(flat_g, flat_r)]

@@ -21,3 +21,15 @@ def shard_map_unchecked(f, *, mesh, in_specs, out_specs):
     except TypeError:
         return _shard_map(f, mesh=mesh, in_specs=in_specs,
                           out_specs=out_specs, check_rep=False)
+
+
+def axis_size(axis_name) -> jax.Array:
+    """Size of a bound mesh axis (or tuple of axes), as a traced scalar.
+
+    Newer JAX exposes ``jax.lax.axis_size``; on older releases ``psum`` of a
+    constant 1 constant-folds to the same static count inside shard_map (one
+    scalar per call site — not a per-leaf ones-tensor reduction)."""
+    try:
+        return jax.lax.axis_size(axis_name)
+    except AttributeError:  # pragma: no cover - depends on jax version
+        return jax.lax.psum(1, axis_name)

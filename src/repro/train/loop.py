@@ -99,7 +99,12 @@ def make_train_step(cfg, opt: Optimizer, dist: L.Distribution = L.LOCAL, *,
     backward) under this policy, so a PrecisionPlan's phase-qualified bwd
     assignments (``attn_qk@bwd.dA``) actually dispatch in training — no
     reliance on an ambient ``use_policy`` context being live at first call.
+    Defaults to the policy riding on ``dist`` (launch profiles put the
+    deployed plan's policy there — see ``launch.sharding.distribution_for``),
+    so the same plan survives into shard_map'd mesh runs unchanged.
     """
+    if numerics_policy is None:
+        numerics_policy = getattr(dist, "numerics_policy", None)
     loss_fn = make_loss_fn(cfg, dist, z_loss=z_loss, remat=remat,
                            moe_impl=moe_impl)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
@@ -169,6 +174,105 @@ def make_train_step(cfg, opt: Optimizer, dist: L.Distribution = L.LOCAL, *,
 
 
 # ---------------------------------------------------------------------------
+# Mesh-sharded data parallelism with exact gradient reduction
+# ---------------------------------------------------------------------------
+def sharded_value_and_grad(loss_fn, axis_names, *,
+                           fdp_grad_spec: Optional[AccumulatorSpec] = None):
+    """Data-parallel value_and_grad for shard_map bodies: local gradients,
+    cross-device mean over ``axis_names`` (a name or tuple of names).
+
+    With ``fdp_grad_spec``, each device's local gradient is quantized onto
+    the fixed-point grid and the mean runs as an integer psum with ONE
+    dequantize against a constant denominator — bitwise identical for any
+    reduction order or mesh factorization of the same device set (integer
+    addition is associative and commutative). Without a spec, a plain float
+    psum (fast, order-dependent). Loss/aux metrics reduce with float pmean
+    either way — they are diagnostics, not part of the bit-equality contract.
+    """
+    from repro.parallel.compat import axis_size
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def fn(params, batch):
+        (loss, aux), grads = grad_fn(params, batch)
+        n = axis_size(axis_names)
+        if fdp_grad_spec is not None:
+            scale = 2.0 ** fdp_grad_spec.lsb
+
+            def one(g):
+                q = jnp.round(g.astype(jnp.float32) / scale).astype(jnp.int32)
+                s = jax.lax.psum(q, axis_names)
+                return (s.astype(jnp.float32) * scale / n).astype(g.dtype)
+        else:
+            def one(g):
+                return (jax.lax.psum(g, axis_names) / n).astype(g.dtype)
+
+        grads = jax.tree.map(one, grads)
+        loss = jax.lax.pmean(loss, axis_names)
+        aux = jax.tree.map(lambda m: jax.lax.pmean(m, axis_names), aux)
+        return (loss, aux), grads
+
+    return fn
+
+
+def make_mesh_train_step(cfg, opt: Optimizer, dist: L.Distribution, *,
+                         remat: str = "none", z_loss: float = 0.0,
+                         fdp_grad_spec: Optional[AccumulatorSpec] = None,
+                         numerics_policy: Optional[NumericsPolicy] = None):
+    """Train step sharded over the FLATTENED mesh (pure data parallelism):
+    the global batch is split over ALL mesh axes jointly, each device runs
+    the full (unsharded) model on its slice under the plan's policy, and
+    gradients reduce through ``sharded_value_and_grad``.
+
+    Per-device shapes depend only on the joint device COUNT, never on the
+    mesh factorization — so every device's local compute is bit-identical on
+    1x8, 2x4 and 8x1 meshes of the same 8 devices, and with ``fdp_grad_spec``
+    the cross-device gradient reduction is an exact integer psum: one step
+    produces bit-identical logits, loss-gradients and updated params for any
+    mesh reshape (the contract ``repro.workloads.mesh`` validates and the
+    ``mesh_reshape_logits`` distributed check guards). PrecisionPlans apply
+    unchanged: ``use_policy`` resolves at trace time, inside shard_map.
+
+    Returns jitted ((params, opt_state), global_batch) -> ((params,
+    opt_state), metrics); params/opt_state replicated, batch global.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.compat import shard_map_unchecked
+
+    if numerics_policy is None:
+        numerics_policy = dist.numerics_policy
+    mesh = dist.mesh
+    axes = tuple(mesh.axis_names)
+    loss_fn = make_loss_fn(cfg, L.LOCAL, z_loss=z_loss, remat=remat)
+    vg = sharded_value_and_grad(loss_fn, axes, fdp_grad_spec=fdp_grad_spec)
+
+    def body(carry, batch):
+        params, opt_state = carry
+        (loss, metrics), grads = vg(params, batch)
+        # grads/params replicated after the psum: the update runs identically
+        # on every device, so the new state stays (bitwise) replicated
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = opt_state["grad_norm"]
+        return (params, opt_state), metrics
+
+    sharded = shard_map_unchecked(
+        body, mesh=mesh,
+        in_specs=((P(), P()), P(axes)),
+        out_specs=((P(), P()), P()))
+
+    def step(carry, batch):
+        ctx = (use_policy(numerics_policy) if numerics_policy is not None
+               else contextlib.nullcontext())
+        with ctx:
+            return sharded(carry, batch)
+
+    return jax.jit(step)
+
+
+# ---------------------------------------------------------------------------
 # Fault-tolerant driver
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
@@ -202,23 +306,32 @@ class Trainer:
 
     def __init__(self, cfg, opt, data, step_fn, checkpoint_dir: str,
                  save_every: int = 50, keep: int = 3,
-                 failure_injector: Optional[Callable[[int], None]] = None):
+                 failure_injector: Optional[Callable[[int], None]] = None,
+                 place_state: Optional[Callable] = None):
         from repro.checkpoint.store import CheckpointStore
         self.cfg, self.opt, self.data, self.step_fn = cfg, opt, data, step_fn
         self.store = CheckpointStore(checkpoint_dir, keep=keep)
         self.save_every = save_every
         self.monitor = StragglerMonitor()
         self.failure_injector = failure_injector
+        self.place_state = place_state
         self.metrics_log: list = []
 
     def init_or_restore(self, key):
         from repro.models import init as minit
         restored = self.store.load_latest()
         if restored is not None:
-            step, state = restored
-            return step, (state["params"], state["opt_state"])
-        params = minit(self.cfg, key)
-        return 0, (params, self.opt.init(params))
+            step, carry = restored[0], (restored[1]["params"],
+                                        restored[1]["opt_state"])
+        else:
+            params = minit(self.cfg, key)
+            step, carry = 0, (params, self.opt.init(params))
+        if self.place_state is not None:
+            # launch profiles device_put the (params, opt_state) carry onto
+            # their mesh shardings here — both at cold start and on every
+            # post-failure restore, so replay resumes sharded
+            carry = self.place_state(carry)
+        return step, carry
 
     def run(self, n_steps: int, key=None, max_restarts: int = 3):
         key = key if key is not None else jax.random.key(0)

@@ -15,6 +15,9 @@
 #   gradients        - value_and_grad step vs the 91-bit-bwd reference
 #   inference        - logit correct-bits + top-1 vs the uniform 91-bit FDP
 #   reproducibility  - bit-stability of results under K-reduction reordering
+#   mesh             - bit-stability across device-mesh factorizations
+#                      (K-sharded sites through fdp_psum + the end-to-end
+#                      logits/gradients contract on multi-device hosts)
 #
 # ``python -m repro.workloads --plan examples/plans/<arch>.json`` runs the
 # zoo against a checked-in plan (the CI smoke entry point).
@@ -25,12 +28,14 @@ from .base import (PROBE_BATCH, PROBE_SEED, PROBE_SEQ, SUMMARY_KEYS,
                    validation_summary)
 from .gradients import LossGradient, bwd91_reference_policy
 from .inference import LogitFidelity
+from .mesh import MeshReshapeStability
 from .reproducibility import KReorderStability
 from .solve import IllConditionedSolve
 
 # the plan-zoo refresh's default gate: model-bound end-to-end validators
-# (the opt-in "solve" workload joins via --validators solve,... — its
-# operand ranges are deliberately hostile to DNN-calibrated accumulators)
+# (the opt-in "solve" and "mesh" workloads join via --validators ... —
+# solve's operand ranges are deliberately hostile to DNN-calibrated
+# accumulators, and mesh's multi-shape sweep wants a multi-device host)
 DEFAULT_VALIDATORS = ("grad", "logits", "repro")
 
 __all__ = [
@@ -39,5 +44,6 @@ __all__ = [
     "available_workloads", "build_validators", "get_workload",
     "make_probe_batch", "probed_sites", "register", "validation_summary",
     "LossGradient", "bwd91_reference_policy", "LogitFidelity",
-    "KReorderStability", "IllConditionedSolve", "DEFAULT_VALIDATORS",
+    "MeshReshapeStability", "KReorderStability", "IllConditionedSolve",
+    "DEFAULT_VALIDATORS",
 ]

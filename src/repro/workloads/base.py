@@ -62,6 +62,11 @@ class ValidationReport:
     # namespace wildcards like "*@bwd" when it can only see a phase).
     site_attribution: dict = dataclasses.field(default_factory=dict)
     details: dict = dataclasses.field(default_factory=dict)
+    # mesh provenance: the device-mesh shape(s) this validation ran under
+    # (e.g. "1x8,2x4,8x1" for the mesh-reshape workload, "2x4" for a
+    # mesh-bound run). None = single-device — the historical default, so
+    # pre-mesh plan-zoo entries stay valid without regeneration.
+    mesh: Optional[str] = None
 
     @property
     def passed(self) -> bool:
@@ -75,7 +80,7 @@ class ValidationReport:
                 return None
             return v
 
-        return {
+        out = {
             "workload": self.workload,
             "score": _f(float(self.score)),
             "threshold": _f(float(self.threshold)),
@@ -85,6 +90,9 @@ class ValidationReport:
                                  for k, v in self.site_attribution.items()},
             "details": {k: _f(v) for k, v in self.details.items()},
         }
+        if self.mesh is not None:
+            out["mesh"] = str(self.mesh)
+        return out
 
     def describe(self) -> str:
         verdict = "pass" if self.passed else "FAIL"

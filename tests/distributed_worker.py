@@ -120,6 +120,85 @@ def check_sp_forward_parity():
     print("CHECK sp_forward_parity OK")
 
 
+def check_fdp_limb_psum():
+    """K-sharded FDP: limb psum == single-device GEMM, bit-for-bit, for
+    every assignment of K-shards to devices (ring order permutations)."""
+    from repro.core import accumulator as acc
+    from repro.core import fdp
+    from repro.parallel.collectives import fdp_psum
+
+    spec = AccumulatorSpec(ovf=30, msb=30, lsb=-30)
+    mesh = jax.make_mesh((8,), ("x",))
+    a = jax.random.normal(jax.random.key(0), (8, 256))
+    b = jax.random.normal(jax.random.key(1), (256, 16))
+    ref = np.asarray(fdp.fdp_gemm(a, b, spec))
+
+    def f(al, bl):
+        limbs = fdp.fdp_gemm_limbs(al, bl, spec)
+        return acc.to_float(spec, fdp_psum(limbs, "x", spec))
+
+    sharded = shard_map_unchecked(f, mesh=mesh,
+                                  in_specs=(P(None, "x"), P("x", None)),
+                                  out_specs=P())
+    rng = np.random.default_rng(0)
+    S = a.shape[1] // 8
+    for trial in range(3):
+        # permute which device owns which K-block: the integer limb psum
+        # must land on identical bits for every shard assignment
+        perm = np.arange(8) if trial == 0 else rng.permutation(8)
+        idx = np.concatenate([np.arange(p * S, (p + 1) * S) for p in perm])
+        out = sharded(a[:, idx], b[idx, :])
+        assert np.array_equal(np.asarray(out), ref), f"order {trial} drifted"
+    print("CHECK fdp_limb_psum OK")
+
+
+def check_mesh_reshape_logits():
+    """Paper-MLP training under the deployed plan: bit-identical logits and
+    loss-gradients on 1x8, 2x4 and 8x1 meshes (the mesh workload), plus one
+    full make_mesh_train_step step landing on identical params."""
+    from repro.configs import get_config
+    from repro.core.dispatch import policy_from_plan
+    from repro.launch.sharding import distribution_for
+    from repro.train.loop import make_mesh_train_step
+    from repro.train.optimizer import adamw
+    from repro.workloads import (MeshReshapeStability, WorkloadContext,
+                                 make_probe_batch)
+    from repro.workloads.mesh import MESH_CAP_BITS
+
+    cfg = get_config("paper-mlp").reduced()
+    plan_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "..", "examples", "plans", "paper_mlp.json")
+    policy = policy_from_plan(plan_path)
+    ctx = WorkloadContext.for_model(cfg)
+    rep = MeshReshapeStability.from_context(ctx).run(policy)
+    assert rep.details["logits_bits"] == MESH_CAP_BITS, rep.details
+    assert rep.details["grad_bits"] == MESH_CAP_BITS, rep.details
+    assert rep.mesh == "1x8,2x4,4x2,8x1", rep.mesh
+    # every FDP-mode site must be bit-identical across mesh factorizations
+    # (its cross-device reduction goes through the limb-summed fdp_psum)
+    for pat, gcfg in policy.overrides:
+        if gcfg.mode != "native" and pat in rep.site_attribution:
+            assert rep.site_attribution[pat] == MESH_CAP_BITS, (
+                pat, rep.site_attribution[pat])
+
+    opt = adamw(lr=1e-3)
+    batch = make_probe_batch(cfg, batch_size=8, seq=8, seed=3,
+                             with_targets=True)
+    grad_spec = AccumulatorSpec(ovf=10, msb=10, lsb=-20)
+    stepped = []
+    for shape in ((1, 8), (2, 4), (8, 1)):
+        mesh = jax.make_mesh(shape, ("data", "model"))
+        dist = distribution_for(mesh, "ddp", numerics_policy=policy)
+        step = make_mesh_train_step(cfg, opt, dist, fdp_grad_spec=grad_spec)
+        (params, _), _metrics = step((ctx.params, opt.init(ctx.params)),
+                                     batch)
+        stepped.append(np.concatenate(
+            [np.asarray(x).ravel() for x in jax.tree.leaves(params)]))
+    assert np.array_equal(stepped[0], stepped[1]), "1x8 vs 2x4 params drift"
+    assert np.array_equal(stepped[0], stepped[2]), "1x8 vs 8x1 params drift"
+    print("CHECK mesh_reshape_logits OK")
+
+
 def check_compressed_grads():
     from repro.parallel.collectives import CompressedGradReducer
     mesh = jax.make_mesh((8,), ("dp",))
@@ -150,6 +229,8 @@ if __name__ == "__main__":
         "pipeline_parity": check_pipeline_parity,
         "sp_forward_parity": check_sp_forward_parity,
         "compressed_grads": check_compressed_grads,
+        "fdp_limb_psum": check_fdp_limb_psum,
+        "mesh_reshape_logits": check_mesh_reshape_logits,
     }
     if which == "all":
         for fn in checks.values():
