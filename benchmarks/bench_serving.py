@@ -1,0 +1,150 @@
+#!/usr/bin/env python
+"""Routed-serving throughput bench: tokens/s per workload class.
+
+Serves a fixed mixed trace (chat / solve / repro, round-robin prompt
+lengths) through the full ``repro.serving`` tier — PlanRouter over the
+checked-in zoo MANIFEST, bucketed AOT engine pool, routed frontend — and
+reports decode throughput per class plus the pool's bucket hit rate. A
+warmup pass compiles every (plan, bucket) engine first; the measured pass
+reuses the warm pool through a fresh frontend, so the rows measure serving,
+not compilation (``trace_count`` is asserted to prove it).
+
+A plain ``jnp.matmul`` anchor row (``impl="native"``) rides along: the
+regression gate calibrates cross-machine speed on native rows, same as
+``bench_gemm``.
+
+    PYTHONPATH=src python benchmarks/bench_serving.py --quick --json out.json
+    python scripts/check_bench_regression.py --baseline BENCH_serving.json \
+        --new out.json
+"""
+
+import argparse
+import json
+import platform
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import init
+from repro.serving import (BucketedEnginePool, PlanRouter, RoutedFrontend,
+                           ServeRequest)
+
+CLASSES = ("chat", "solve", "repro")
+ANCHOR_SHAPE = (256, 1024, 256)   # several ms/call: above the gate's floor
+
+
+def build_trace(vocab: int, per_class: int, max_new: int) -> list:
+    reqs = []
+    for i in range(per_class * len(CLASSES)):
+        plen = 3 + (i * 5) % 11
+        # deterministic token pattern — the bench must serve the same trace
+        # on every machine so rows are comparable across runs
+        prompt = [(7 * i + 3 * j + 1) % vocab for j in range(plen)]
+        reqs.append(ServeRequest(uid=i, prompt=prompt, max_new=max_new,
+                                 workload=CLASSES[i % len(CLASSES)]))
+    return reqs
+
+
+def bench_anchor(reps: int = 5) -> dict:
+    m, k, n = ANCHOR_SHAPE
+    a = jnp.ones((m, k), jnp.float32)
+    b = jnp.ones((k, n), jnp.float32)
+    f = jax.jit(jnp.matmul)
+    f(a, b).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        f(a, b).block_until_ready()
+    sec = (time.perf_counter() - t0) / reps
+    return {"name": f"serving_native_matmul_anchor_{m}x{k}x{n}",
+            "impl": "native", "seconds_per_call": sec,
+            "tokens_per_s": 1.0 / sec,
+            "derived": "per-call rate of a plain XLA matmul (machine anchor)"}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-mlp")
+    ap.add_argument("--full", action="store_true",
+                    help="full (non-reduced) config")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller trace for bounded CI lanes")
+    ap.add_argument("--plans", default="examples/plans")
+    ap.add_argument("--buckets", default="2x32,4x64")
+    ap.add_argument("--per-class", type=int, default=None)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    per_class = args.per_class or (2 if args.quick else 4)
+    cfg = get_config(args.arch)
+    router = PlanRouter.from_manifest(args.plans, arch=cfg.name)
+    if not args.full:
+        cfg = cfg.reduced()
+    params = init(cfg, jax.random.key(0))
+    pool = BucketedEnginePool(cfg, params, args.buckets, max_live=8)
+
+    # warmup pass: compile every (plan, bucket) engine the trace will touch
+    warm = RoutedFrontend(pool, router, max_live_batches=4)
+    for r in build_trace(cfg.vocab_size, 1, 2):
+        warm.submit(r)
+    warm.run()
+
+    # measured pass: fresh frontend, warm pool — serving cost only
+    front = RoutedFrontend(pool, router, max_live_batches=4)
+    trace = build_trace(cfg.vocab_size, per_class, args.max_new)
+    comps = [front.submit(r) for r in trace]
+    front.run()
+    bad = [c for c in comps if not c.ok]
+    if bad:
+        raise SystemExit(f"{len(bad)} request(s) failed: {bad[0].error}")
+    retraced = [k for k, e in pool.live().items() if e.trace_count != 1]
+    if retraced:
+        raise SystemExit(f"engines retraced after warmup: {retraced}")
+
+    stats = front.stats()
+    rows = []
+    for wl, st in stats["classes"].items():
+        rows.append({
+            "name": f"serving_routed_{wl}", "impl": "routed",
+            "workload": wl,
+            "plans": sorted(st["plans"]),
+            "seconds_per_call": (stats["wall_seconds"] / st["decode_tokens"]
+                                 if st["decode_tokens"] else None),
+            "tokens_per_s": st["tokens_per_s"],
+            "decode_tokens": st["decode_tokens"],
+            "derived": f"{st['completed']} reqs via "
+                       + ",".join(sorted(st["plans"])),
+        })
+    pool_st = stats["pool"]
+    rows.append({   # informational: no throughput metric, the gate skips it
+        "name": "serving_bucket_hit_rate", "impl": "routed",
+        "bucket_hit_rate": pool_st["bucket_hit_rate"],
+        "bucket_hits": pool_st["bucket_hits"],
+        "compiles": pool_st["compiles"], "evictions": pool_st["evictions"],
+    })
+    rows.append(bench_anchor())
+
+    print(f"[bench_serving] {cfg.name}: {len(trace)} reqs, "
+          f"buckets={args.buckets}, wall={stats['wall_seconds']:.2f}s")
+    for r in rows:
+        tps = r.get("tokens_per_s")
+        tps = f"{tps:10.2f} tok/s" if tps is not None else " " * 16
+        print(f"  {r['name']:32s} {tps}  {r.get('derived', '')}")
+    print(f"  bucket hit rate: {pool_st['bucket_hit_rate']:.2f} "
+          f"({pool_st['bucket_hits']})")
+
+    if args.json:
+        doc = {"bench": "bench_serving", "metric": "tokens_per_s",
+               "quick": bool(args.quick), "arch": cfg.name,
+               "backend": jax.default_backend(),
+               "platform": platform.platform(),
+               "wall_seconds": stats["wall_seconds"], "rows": rows}
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+        print(f"[bench_serving] wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

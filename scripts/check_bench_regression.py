@@ -1,10 +1,13 @@
 #!/usr/bin/env python
-"""Bench regression gate: diff a fresh ``bench_gemm --json`` run against the
-committed baseline (``BENCH_gemm.json`` at the repo root) and fail on any row
-whose throughput regressed more than the threshold (default 25%).
+"""Bench regression gate: diff a fresh bench ``--json`` run against its
+committed baseline and fail on any row whose throughput regressed more than
+the threshold (default 25%). Works for any bench document that declares its
+kind (``bench``) and throughput key (``metric``, default ``gflops``) —
+``bench_gemm``/``BENCH_gemm.json`` and ``bench_serving``/``BENCH_serving.json``
+share this gate; baseline and new runs must be the same kind.
 
-Rows are matched by ``name``; throughput is the row's ``gflops`` (rows without
-a throughput figure — parity checks, summaries — are ignored). Because the
+Rows are matched by ``name``; throughput is the row's ``metric`` value (rows
+without a throughput figure — parity checks, summaries — are ignored). Because the
 baseline is committed from one machine and CI runs on another, the default
 comparison is **scale-calibrated**: every ratio is divided by the machine
 scale measured on the ``impl == "native"`` rows (plain XLA ``jnp.matmul`` —
@@ -29,12 +32,15 @@ import statistics
 import sys
 
 
-def load_rows(path: str) -> dict:
+def load_rows(path: str) -> tuple:
+    """-> (bench kind, throughput metric key, {name: row with metric})."""
     with open(path) as f:
         doc = json.load(f)
-    if doc.get("bench") != "bench_gemm" or "rows" not in doc:
-        raise SystemExit(f"{path}: not a bench_gemm --json document")
-    return {r["name"]: r for r in doc["rows"] if "gflops" in r}
+    kind = doc.get("bench")
+    if not kind or "rows" not in doc:
+        raise SystemExit(f"{path}: not a bench --json document")
+    metric = doc.get("metric", "gflops")
+    return kind, metric, {r["name"]: r for r in doc["rows"] if metric in r}
 
 
 def main(argv=None):
@@ -55,11 +61,16 @@ def main(argv=None):
                          "CPU and cannot carry a regression verdict)")
     args = ap.parse_args(argv)
 
-    base = load_rows(args.baseline)
+    kind, metric, base = load_rows(args.baseline)
     new: dict = {}
     for path in args.new:
-        for name, row in load_rows(path).items():
-            if name not in new or row["gflops"] > new[name]["gflops"]:
+        nkind, nmetric, rows = load_rows(path)
+        if (nkind, nmetric) != (kind, metric):
+            raise SystemExit(
+                f"{path}: bench kind/metric ({nkind}, {nmetric}) does not "
+                f"match baseline {args.baseline} ({kind}, {metric})")
+        for name, row in rows.items():
+            if name not in new or row[metric] > new[name][metric]:
                 new[name] = row
     common = sorted(set(base) & set(new))
     if not common:
@@ -70,7 +81,7 @@ def main(argv=None):
         print(f"[bench-gate] WARNING: {len(missing)} baseline rows absent "
               f"from the new run: {missing}")
 
-    ratios = {n: new[n]["gflops"] / base[n]["gflops"] for n in common}
+    ratios = {n: new[n][metric] / base[n][metric] for n in common}
     gated = [n for n in common
              if base[n]["seconds_per_call"] >= args.min_seconds]
     if args.absolute:
@@ -102,8 +113,8 @@ def main(argv=None):
             verdict = "FAIL"
         else:
             verdict = "ok"
-        print(f"  {name:48s} {base[name]['gflops']:9.3f} -> "
-              f"{new[name]['gflops']:9.3f} GFLOP/s  ({r:5.2f}x) {verdict}")
+        print(f"  {name:48s} {base[name][metric]:9.3f} -> "
+              f"{new[name][metric]:9.3f} {metric}  ({r:5.2f}x) {verdict}")
         if verdict == "FAIL":
             failed.append(name)
 

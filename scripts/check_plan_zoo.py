@@ -13,7 +13,9 @@ For every ``examples/plans/*.json`` (except MANIFEST.json) this
      (``meta.validation``, written by the ``repro.workloads`` validators at
      search time) and that the MANIFEST entry summarizes the same scores,
   3. cross-checks the MANIFEST entry (file listed, site list and energy
-     bookkeeping in sync with the plan document),
+     bookkeeping in sync with the plan document) and that it carries the
+     routing metadata ``repro.serving.PlanRouter`` ranks by — numeric
+     per-workload validation scores and numeric energy,
   4. dry-runs the plan's own architecture through the serving driver with
      ``--precision-plan`` on the reduced config — a real forward + decode
      under the plan's numerics, so a plan whose formats/accumulators no
@@ -132,6 +134,21 @@ def check_plan(path: str, manifest: dict, serve: bool = True) -> list:
         if entry.get("validation") != validation_summary(plan.meta):
             errors.append("MANIFEST validation scores out of sync "
                           "with plan meta")
+
+        # 3b. routing metadata: the serving tier's PlanRouter ranks plans by
+        # the MANIFEST's recorded evidence — every entry must carry numeric
+        # per-workload scores and numeric energy, or routing silently loses
+        # this arch. routed_plan_from_entry raises ValueError on exactly the
+        # fields the router reads.
+        from repro.serving import routed_plan_from_entry
+        try:
+            rp = routed_plan_from_entry(arch_id, entry,
+                                        os.path.dirname(path))
+        except ValueError as e:
+            errors.append(f"routing metadata invalid: {e}")
+        else:
+            if not rp.scores:
+                errors.append("routing metadata: no workload scores")
 
     # 4. dry-run the plan's arch under --precision-plan (one plan crashing
     # must not mask whether the rest of the zoo still serves)

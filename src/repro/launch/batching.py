@@ -16,7 +16,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 from collections import deque
-from typing import Optional, Union
+from typing import Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +41,16 @@ def _resolve_policy(policy) -> Optional[NumericsPolicy]:
         f"got {type(policy).__name__}")
 
 
+class CacheExhausted(RuntimeError):
+    """The engine's global KV write cursor can no longer fit any queued
+    request. The cursor (``cache["len"]``) is shared across slots and never
+    rewinds, so once the queue head's ``prompt + max_new`` exceeds
+    ``cache_remaining()`` nothing will ever be admitted again — call
+    ``reset_cache()`` between drained generations, or serve through the
+    ``repro.serving`` frontend, whose admission control parks requests and
+    recycles engines instead of stalling."""
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
@@ -48,6 +58,16 @@ class Request:
     max_new: int = 16
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # scheduling evidence, recorded by ContinuousBatcher.step: how many
+    # engine steps this request was live in, and how its token budget split
+    # between prefill (prompt tokens fed) and decode (tokens generated).
+    # The serving tier's per-class stats read these; tests assert on them.
+    steps: int = 0
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    # streaming hook: called with each freshly decoded token id, from inside
+    # the engine step that produced it (the serving tier's `stream` method)
+    on_token: Optional[Callable[[int], None]] = None
 
 
 class ContinuousBatcher:
@@ -87,7 +107,9 @@ class ContinuousBatcher:
         self.cache = init_cache(cfg, n_slots, max_len, dtype=jnp.float32)
         # the write cursor cache["len"] is global; each slot masks its
         # attention to [start[slot], len) so reused slots never see the
-        # previous occupant's KV
+        # previous occupant's KV. ``_len`` mirrors the cursor host-side so
+        # admission control never forces a device sync.
+        self._len = 0
         self._start = np.zeros(n_slots, dtype=np.int32)
         self.cache["start"] = jnp.zeros((n_slots,), jnp.int32)
         # traced exactly once per engine when warmed up — the regression
@@ -117,6 +139,28 @@ class ContinuousBatcher:
         return use_policy(self.policy) if self.policy is not None \
             else contextlib.nullcontext()
 
+    def cache_remaining(self) -> int:
+        """Writable KV positions left before the global write cursor hits the
+        cache wall. The cursor advances one position per engine step (shared
+        by every slot) and never rewinds, so this is the budget any newly
+        admitted request's ``prompt + max_new`` must fit inside."""
+        return max(0, self.max_len - 1 - self._len)
+
+    def reset_cache(self) -> None:
+        """Reclaim KV room without recompiling: reallocate the cache and
+        rewind the cursor. The compiled decode step is shape-stable — the
+        cache is data — so this is the cheap lifecycle move for long-running
+        engines. Only legal while no slot is live (a live slot's KV would be
+        destroyed mid-generation)."""
+        if any(r is not None for r in self.active):
+            raise RuntimeError("reset_cache with live slots would destroy "
+                               "in-flight generations; drain first")
+        self.cache = init_cache(self.cfg, self.n_slots, self.max_len,
+                                dtype=jnp.float32)
+        self._len = 0
+        self._start[:] = 0
+        self.cache["start"] = jnp.zeros((self.n_slots,), jnp.int32)
+
     def numerics_info(self) -> dict:
         """GemmPlan cache + call-site report for this engine's decode step
         (introspection: what the dispatch layer planned for serving)."""
@@ -132,9 +176,16 @@ class ContinuousBatcher:
         changed = False
         for i in range(self.n_slots):
             if self.active[i] is None and self.queue:
+                head = self.queue[0]
+                if len(head.prompt) + head.max_new > self.cache_remaining():
+                    # the cursor has outrun the cache: admitting this request
+                    # would silently truncate its generation (the historical
+                    # bug). Refuse the slot and leave it queued — FIFO, so
+                    # later smaller requests never starve the head.
+                    break
                 self.active[i] = self.queue.popleft()
                 self._fed[i] = 0
-                self._start[i] = int(self.cache["len"])
+                self._start[i] = self._len
                 changed = True
         if changed:
             self.cache["start"] = jnp.asarray(self._start)
@@ -163,25 +214,46 @@ class ContinuousBatcher:
         # same numerics the warmup path compiles with
         with self._policy_ctx():
             logits, self.cache = self._step(self.cache, toks)
+        self._len += 1
         nxt = np.asarray(jnp.argmax(logits[:, 0, :self.cfg.vocab_size], -1))
         for i, req in enumerate(self.active):
             if req is None:
                 continue
             self._fed[i] += 1
+            req.steps += 1
+            if self._fed[i] <= len(req.prompt):
+                req.prefill_tokens += 1          # this step fed a prompt token
             if self._fed[i] < len(req.prompt):
                 continue                                # still prefilling
             req.out.append(int(nxt[i]))
+            req.decode_tokens += 1
+            if req.on_token is not None:
+                req.on_token(req.out[-1])
             hit_eos = self.eos_id is not None and req.out[-1] == self.eos_id
-            if len(req.out) >= req.max_new or hit_eos or \
-                    self._fed[i] + len(req.out) >= self.max_len - 1:
+            # the cursor wall: the next feed would write past the cache.
+            # Admission control (cache_remaining) guarantees this never fires
+            # for admitted requests; it stays as the last-ditch guard.
+            at_wall = self._len >= self.max_len - 1
+            if len(req.out) >= req.max_new or hit_eos or at_wall:
                 req.done = True
                 self.active[i] = None                   # slot freed
         return True
 
     def run(self, max_steps: int = 10_000) -> None:
-        """Drive until the queue and all slots drain (or max_steps)."""
+        """Drive until the queue and all slots drain (or max_steps).
+
+        Raises ``CacheExhausted`` when the queue is non-empty but nothing can
+        ever be admitted (the global cursor has outrun the cache) — loud
+        refusal instead of the old silent truncation."""
         for _ in range(max_steps):
-            if not self.step() and not self.queue:
+            if not self.step():
+                if self.queue:
+                    head = self.queue[0]
+                    raise CacheExhausted(
+                        f"{len(self.queue)} queued request(s) can no longer "
+                        f"fit: head needs {len(head.prompt) + head.max_new} "
+                        f"positions, cache_remaining()="
+                        f"{self.cache_remaining()} of max_len={self.max_len}")
                 break
 
 

@@ -11,6 +11,10 @@ Local (CPU) example:
 ``ContinuousBatcher`` with plan-aware AOT warmup (the decode step compiles
 under the plan's formats before the first request arrives, so plan-served
 decode hits the compile cache instead of retracing mid-request).
+``--engine routed`` goes through the full serving tier (``repro.serving``):
+the plan zoo's MANIFEST picks each request's numerics by workload class
+(``--workload``), a bucketed AOT engine pool serves it, and per-class
+routing/latency stats print at the end.
 """
 
 from __future__ import annotations
@@ -65,12 +69,22 @@ def main(argv=None):
                     choices=["fsdp", "ddp", "decode_tp"],
                     help="sharding profile when --mesh is set")
     ap.add_argument("--engine", default="simple",
-                    choices=["simple", "continuous"],
-                    help="simple whole-batch decode, or the fixed-slot "
-                         "ContinuousBatcher with plan-aware warmup")
+                    choices=["simple", "continuous", "routed"],
+                    help="simple whole-batch decode, the fixed-slot "
+                         "ContinuousBatcher with plan-aware warmup, or the "
+                         "workload-routed bucketed serving tier")
+    ap.add_argument("--workload", default="chat",
+                    help="workload class (chat/solve/repro) or explicit plan "
+                         "name for --engine routed")
+    ap.add_argument("--plans", default="examples/plans",
+                    help="plan zoo directory for --engine routed")
+    ap.add_argument("--buckets", default=None,
+                    help="slots x len bucket table for --engine routed, "
+                         "e.g. 2x32,4x64 (default: one bucket sized to fit)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
+    base_arch = cfg.name
     if args.reduced:
         cfg = cfg.reduced()
     params = init(cfg, jax.random.key(0))
@@ -81,7 +95,7 @@ def main(argv=None):
               if args.precision_plan else None)
     dist = LOCAL
     if args.mesh:
-        if args.engine == "continuous":
+        if args.engine != "simple":
             raise SystemExit("--mesh is supported with --engine simple only")
         from repro.launch import sharding as shd
         mesh = shd.make_mesh(args.mesh)
@@ -91,7 +105,38 @@ def main(argv=None):
             params, shd.param_shardings(cfg, params, mesh,
                                         profile=args.profile))
     t0 = time.time()
-    if args.engine == "continuous":
+    if args.engine == "routed":
+        from repro.serving import (BucketedEnginePool, PlanRouter,
+                                   RoutedFrontend, ServeRequest)
+        if cfg.family not in ("dense", "moe", "vlm"):
+            raise SystemExit(
+                f"--engine routed supports KV-cache families "
+                f"(dense/moe/vlm); {args.arch} is family={cfg.family!r} — "
+                f"use the default --engine simple")
+        if args.precision_plan:
+            raise SystemExit("--engine routed picks plans from the zoo "
+                             "MANIFEST; use --workload, not --precision-plan")
+        router = PlanRouter.from_manifest(args.plans, arch=base_arch)
+        buckets = args.buckets or (
+            f"{args.batch}x{args.prompt_len + args.gen + 2}")
+        pool = BucketedEnginePool(cfg, params, buckets)
+        front = RoutedFrontend(pool, router)
+        comps = [front.submit(ServeRequest(uid=i, prompt=row.tolist(),
+                                           max_new=args.gen,
+                                           workload=args.workload))
+                 for i, row in enumerate(jnp.asarray(prompts))]
+        front.run()
+        toks = jnp.asarray([c.result() for c in comps])
+        dt = time.time() - t0
+        st = front.stats()
+        for wl, cs in st["classes"].items():
+            plans = ", ".join(sorted(cs["plans"]))
+            print(f"[serve:routed] {wl}: {cs['completed']}/{cs['submitted']} "
+                  f"ok via {plans}  mean_steps={cs['mean_steps']:.1f} "
+                  f"tok/s={cs['tokens_per_s']:.1f}")
+        print(f"[serve:routed] pool: {st['pool']['compiles']} compiles, "
+              f"buckets={st['pool']['bucket_hits']}")
+    elif args.engine == "continuous":
         from repro.launch.batching import ContinuousBatcher, Request
         if cfg.family not in ("dense", "moe", "vlm"):
             raise SystemExit(

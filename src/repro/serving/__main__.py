@@ -1,0 +1,120 @@
+"""Serve a mixed workload trace through the routed serving tier.
+
+    PYTHONPATH=src python -m repro.serving --arch paper-mlp --reduced \
+        --requests 12 --buckets 2x32,4x64 --max-live 2
+
+Builds the architecture, loads the plan zoo's MANIFEST for it (with the
+derived fdp91/repro variants), synthesizes a mixed trace — chat (generate),
+solve (generate under wide numerics), repro (bit-stable generate), a
+streamed chat request and a score request — serves it through
+``RoutedFrontend``, and prints per-class routing/latency stats plus the
+engine pool's compile/eviction/bucket-hit bookkeeping.
+
+``--require-complete`` exits nonzero if any request failed or was rejected
+(the CI gate mode).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+
+from repro.configs import get_config
+from repro.models import init
+from repro.serving import (BucketedEnginePool, PlanRouter, RoutedFrontend,
+                           ServeRequest, parse_buckets)
+
+CLASS_CYCLE = ("chat", "solve", "repro")
+
+
+def build_trace(rng, vocab: int, n: int, max_new: int) -> list:
+    """A deterministic mixed trace: classes round-robin over varied prompt
+    lengths; one streamed request and one score request ride along."""
+    reqs = []
+    for i in range(n):
+        wl = CLASS_CYCLE[i % len(CLASS_CYCLE)]
+        plen = 3 + (i * 5) % 11
+        prompt = [int(t) for t in
+                  jax.random.randint(jax.random.fold_in(rng, i),
+                                     (plen,), 0, vocab)]
+        method = "generate"
+        if i == 1:
+            method = "stream"
+        elif i == 2:
+            method = "score"
+        reqs.append(ServeRequest(uid=i, prompt=prompt, max_new=max_new,
+                                 workload=wl, method=method))
+    return reqs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-mlp")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--plans", default="examples/plans",
+                    help="plan zoo directory (MANIFEST.json inside)")
+    ap.add_argument("--requests", type=int, default=9)
+    ap.add_argument("--max-new", type=int, default=6)
+    ap.add_argument("--buckets", default="2x32,4x64")
+    ap.add_argument("--max-live", type=int, default=2,
+                    help="max concurrently live decode batches (backpressure)")
+    ap.add_argument("--max-engines", type=int, default=6,
+                    help="resident-engine cap for the LRU pool")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None,
+                    help="also dump the stats dict to this path")
+    ap.add_argument("--require-complete", action="store_true",
+                    help="exit 1 unless every request completed (CI gate)")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    # plans are recorded per base arch; the reduced config only shrinks shapes
+    router = PlanRouter.from_manifest(args.plans, arch=cfg.name)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = init(cfg, jax.random.key(args.seed))
+    pool = BucketedEnginePool(cfg, params, parse_buckets(args.buckets),
+                              max_live=args.max_engines)
+    front = RoutedFrontend(pool, router, max_live_batches=args.max_live)
+
+    streamed: list = []
+    reqs = build_trace(jax.random.key(args.seed + 1), cfg.vocab_size,
+                       args.requests, args.max_new)
+    for r in reqs:
+        if r.method == "stream":
+            r.on_token = streamed.append
+    comps = [front.submit(r) for r in reqs]
+    front.run()
+
+    stats = front.stats()
+    print(f"[repro.serving] {cfg.name}: {len(reqs)} requests, "
+          f"buckets={args.buckets}, max_live={args.max_live}")
+    for wl, st in stats["classes"].items():
+        plans = ", ".join(f"{p} x{n}" for p, n in sorted(st["plans"].items()))
+        print(f"  {wl:8s} {st['completed']}/{st['submitted']} ok "
+              f"({st['rejected']} rejected)  mean_steps={st['mean_steps']:.1f}"
+              f"  decode_toks={st['decode_tokens']}"
+              f"  tok/s={st['tokens_per_s']:.1f}  -> {plans}")
+    pool_st = stats["pool"]
+    print(f"  pool: {pool_st['compiles']} compiles, {pool_st['hits']} hits, "
+          f"{pool_st['evictions']} evictions, resident={pool_st['resident']},"
+          f" bucket_hits={pool_st['bucket_hits']}")
+    if streamed:
+        print(f"  streamed uid=1: {streamed}")
+
+    failures = [c for c in comps if not c.ok]
+    for c in failures:
+        print(f"  FAILED uid={c.request.uid} class={c.request.workload}: "
+              f"{c.error}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(stats, f, indent=1, sort_keys=True, default=str)
+    if args.require_complete and failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

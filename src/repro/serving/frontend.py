@@ -1,0 +1,265 @@
+"""Serving frontend: request queue, admission control, backpressure, futures.
+
+The layer between clients and the engine pool. A ``ServeRequest`` declares
+its workload class (or an explicit plan), its method, and its constraints;
+``submit`` routes it (``PlanRouter``), picks its bucket (padded dispatch),
+and returns a ``Completion`` future immediately. ``run`` is the cooperative
+event loop: it activates (plan, bucket, method) groups under a
+``max_live_batches`` backpressure cap, feeds engines only what their KV
+budget admits (parking the rest — never the old silent truncation), recycles
+drained engines whose cursor ran out of room, steps every live engine, and
+resolves futures as requests finish. Streaming requests get their tokens
+through ``on_token`` callbacks from inside the decode step that produced
+them.
+
+Typed failure surface: ``RoutingError`` (no plan satisfies the request) and
+``AdmissionError`` (no bucket fits / queue at cap) resolve the future as
+rejected — one bad request never takes the loop down.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import Counter, OrderedDict, deque
+from typing import Callable, Optional
+
+from repro.launch.batching import Request
+from .engine import AdmissionError, BucketedEnginePool, GenerateEngine
+from .router import PlanRouter, RoutingError
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One client request. ``workload`` is a class (chat/solve/repro) or an
+    explicit plan name; ``method`` one of score/generate/stream."""
+
+    uid: int
+    prompt: list
+    max_new: int = 16
+    workload: str = "chat"
+    method: str = "generate"
+    min_bits: Optional[float] = None
+    bit_stable: bool = False
+    on_token: Optional[Callable[[int], None]] = None   # stream delivery
+
+
+class Completion:
+    """Per-request completion future (host-side: the loop is cooperative).
+    ``result()`` returns generated tokens (generate/stream) or the prompt
+    log-probability (score); rejected/failed requests re-raise their typed
+    error."""
+
+    def __init__(self, request: ServeRequest):
+        self.request = request
+        self.done = False
+        self.error: Optional[Exception] = None
+        self.tokens: Optional[list] = None
+        self.score: Optional[float] = None
+        self.plan: Optional[str] = None
+        self.bucket: Optional[str] = None
+        self.steps = 0
+        self.prefill_tokens = 0
+        self.decode_tokens = 0
+
+    @property
+    def ok(self) -> bool:
+        return self.done and self.error is None
+
+    def result(self):
+        if not self.done:
+            raise RuntimeError(f"request {self.request.uid} still pending — "
+                               "drive the frontend with run()")
+        if self.error is not None:
+            raise self.error
+        return self.score if self.request.method == "score" else self.tokens
+
+    def _reject(self, err: Exception) -> "Completion":
+        self.error, self.done = err, True
+        return self
+
+
+class RoutedFrontend:
+    """Routing + buckets + backpressure in front of a BucketedEnginePool."""
+
+    def __init__(self, pool: BucketedEnginePool, router: PlanRouter,
+                 max_live_batches: int = 2, max_queue: int = 256):
+        self.pool, self.router = pool, router
+        self.max_live_batches = max_live_batches
+        self.max_queue = max_queue
+        # (plan_name, bucket, method) -> deque[Completion]; OrderedDict so
+        # group activation is FIFO in first-arrival order
+        self._groups: OrderedDict = OrderedDict()
+        self._live: dict = {}                 # group key -> engine
+        self._inflight: dict = {}             # uid -> (Completion, Request)
+        self._completed: list = []
+        self.stats_by_class: dict = {}
+        self._wall = 0.0
+
+    # -- submission ---------------------------------------------------------
+    def submit(self, req: ServeRequest) -> Completion:
+        comp = Completion(req)
+        st = self._class_stats(req.workload)
+        st["submitted"] += 1
+        try:
+            if req.method not in ("score", "generate", "stream"):
+                raise AdmissionError(f"unknown method {req.method!r}")
+            plan = self.router.route(req.workload, min_bits=req.min_bits,
+                                     bit_stable=req.bit_stable)
+            bucket = self.pool.bucket_for(len(req.prompt), (
+                0 if req.method == "score" else req.max_new))
+            if self._queued() >= self.max_queue:
+                raise AdmissionError(
+                    f"queue at backpressure cap ({self.max_queue}); retry")
+        except (RoutingError, AdmissionError) as e:
+            st["rejected"] += 1
+            return comp._reject(e)
+        comp.plan, comp.bucket = plan.name, bucket.label
+        st["plans"][plan.name] += 1
+        key = (plan.name, bucket, req.method)
+        self._groups.setdefault(key, deque()).append(comp)
+        return comp
+
+    def _queued(self) -> int:
+        return sum(len(q) for q in self._groups.values())
+
+    def _class_stats(self, workload: str) -> dict:
+        return self.stats_by_class.setdefault(workload, {
+            "submitted": 0, "rejected": 0, "completed": 0, "steps": 0,
+            "prefill_tokens": 0, "decode_tokens": 0, "plans": Counter()})
+
+    # -- the event loop -----------------------------------------------------
+    def run(self, max_steps: int = 100_000) -> list:
+        """Drive until every submitted request resolves. Returns the
+        completions resolved during this call."""
+        t0 = time.perf_counter()
+        resolved_before = len(self._completed)
+        idle_ticks = 0
+        for _ in range(max_steps):
+            if not self._groups and not self._inflight:
+                break
+            activated = self._activate_groups()
+            self._feed_live()
+            progressed = self._step_live()
+            self._harvest()
+            if progressed or activated:
+                idle_ticks = 0
+                continue
+            # one idle tick is legal (an engine retired this tick; a parked
+            # group activates on the next); two in a row means nothing can
+            # ever move — e.g. max_live_batches=0
+            idle_ticks += 1
+            if idle_ticks > 1:
+                raise RuntimeError(
+                    "frontend stalled: queued groups but nothing live "
+                    f"(max_live_batches={self.max_live_batches})")
+        else:
+            raise RuntimeError(f"frontend did not drain in {max_steps} steps")
+        self._wall += time.perf_counter() - t0
+        return self._completed[resolved_before:]
+
+    def _activate_groups(self) -> int:
+        """Bring queued groups live under the max-live-batches cap. Score
+        groups execute immediately (one-shot, no resident decode state).
+        Returns how many groups made progress (activated or scored)."""
+        n = 0
+        for key in list(self._groups):
+            plan_name, bucket, method = key
+            if key in self._live:
+                continue
+            if method == "score":
+                self._run_score_group(key)
+                n += 1
+                continue
+            if len(self._live) >= self.max_live_batches:
+                continue                      # backpressure: stay parked
+            self._live[key] = self.pool.get(self.router[plan_name], bucket,
+                                            method)
+            n += 1
+        return n
+
+    def _run_score_group(self, key) -> None:
+        plan_name, bucket, _ = key
+        q = self._groups.pop(key)
+        eng = self.pool.get(self.router[plan_name], bucket, "score")
+        while q:
+            batch = [q.popleft() for _ in range(min(len(q), bucket.n_slots))]
+            scores = eng.score_batch([c.request.prompt for c in batch])
+            for comp, s in zip(batch, scores):
+                comp.score, comp.done = s, True
+                st = self._class_stats(comp.request.workload)
+                st["completed"] += 1
+                st["prefill_tokens"] += len(comp.request.prompt)
+                self._completed.append(comp)
+
+    def _feed_live(self) -> None:
+        """Admit queued requests into their live engines — only what the
+        engine's remaining KV budget fits; recycle a drained engine whose
+        cursor ran out; park the rest for the next tick."""
+        for key, eng in self._live.items():
+            if not isinstance(eng, GenerateEngine):
+                continue
+            q = self._groups.get(key)
+            if not q:
+                continue
+            while q:
+                comp = q[0]
+                need = len(comp.request.prompt) + comp.request.max_new
+                eng.recycle_if_exhausted(need)
+                free = (sum(r is None for r in eng.batcher.active)
+                        - len(eng.batcher.queue))
+                if need > eng.cache_remaining() or free <= 0:
+                    break                     # parked, not truncated
+                q.popleft()
+                raw = Request(uid=comp.request.uid,
+                              prompt=list(comp.request.prompt),
+                              max_new=comp.request.max_new,
+                              on_token=comp.request.on_token)
+                self._inflight[comp.request.uid] = (comp, raw)
+                eng.admit(raw)
+            if not q:
+                self._groups.pop(key, None)
+
+    def _step_live(self) -> bool:
+        progressed = False
+        for eng in self._live.values():
+            if eng.step():
+                progressed = True
+        return progressed
+
+    def _harvest(self) -> None:
+        """Resolve futures for finished requests; retire drained engines
+        whose group queue is empty (frees a live-batch slot)."""
+        done_uids = [uid for uid, (_, raw) in self._inflight.items()
+                     if raw.done]
+        for uid in done_uids:
+            comp, raw = self._inflight.pop(uid)
+            comp.tokens, comp.done = raw.out, True
+            comp.steps, comp.prefill_tokens = raw.steps, raw.prefill_tokens
+            comp.decode_tokens = raw.decode_tokens
+            st = self._class_stats(comp.request.workload)
+            st["completed"] += 1
+            st["steps"] += raw.steps
+            st["prefill_tokens"] += raw.prefill_tokens
+            st["decode_tokens"] += raw.decode_tokens
+            self._completed.append(comp)
+        for key in [k for k, e in self._live.items()
+                    if e.idle() and not self._groups.get(k)]:
+            self._groups.pop(key, None)
+            del self._live[key]
+
+    # -- reporting ----------------------------------------------------------
+    def stats(self) -> dict:
+        """Per-class routing/latency/throughput plus pool bookkeeping."""
+        classes = {}
+        for wl, st in sorted(self.stats_by_class.items()):
+            n = st["completed"]
+            classes[wl] = {
+                **{k: v for k, v in st.items() if k != "plans"},
+                "plans": dict(st["plans"]),
+                "mean_steps": (st["steps"] / n if n else 0.0),
+                "tokens_per_s": (st["decode_tokens"] / self._wall
+                                 if self._wall > 0 else 0.0),
+            }
+        return {"classes": classes, "pool": self.pool.stats(),
+                "wall_seconds": self._wall}

@@ -1,0 +1,320 @@
+"""repro.serving — routing, bucketed engine pool, frontend, and the
+batcher's admission-control contract.
+
+Selection tests drive PlanRouter over synthetic evidence (no model needed);
+the e2e tests serve mixed workload classes through the full tier on the
+tiny paper-mlp arch and require bit-identical outputs against dedicated
+single-plan engines, with trace_count proving no recompiles after warmup.
+"""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.dispatch import FDP91
+from repro.launch.batching import CacheExhausted, ContinuousBatcher, Request
+from repro.models import init
+from repro.serving import (AdmissionError, Bucket, BucketedEnginePool,
+                           PlanRouter, RoutedFrontend, RoutedPlan,
+                           RoutingError, ScoreEngine, ServeRequest,
+                           parse_buckets)
+
+PLANS_DIR = os.path.join(os.path.dirname(__file__), "..", "examples", "plans")
+
+
+# ---------------------------------------------------------------------------
+# PlanRouter selection over synthetic evidence
+# ---------------------------------------------------------------------------
+
+def _plan(name, energy, *, solve=None, repro=None, passed=True,
+          bits=20.0, certified=False):
+    scores, ok = {"logits": bits}, {"logits": passed}
+    if solve is not None:
+        scores["solve"], ok["solve"] = solve, passed
+    if repro is not None:
+        scores["repro"], ok["repro"] = repro, passed
+    return RoutedPlan(name=name, scores=scores, passed=ok, energy=energy,
+                      validated_bits=bits, repro_certified=certified,
+                      loader=lambda: FDP91)
+
+
+@pytest.fixture
+def router():
+    return PlanRouter([
+        _plan("cheap", 0.2, solve=18.0, bits=16.0),
+        _plan("mid", 0.5, solve=30.0, repro=51.0, bits=24.0, certified=True),
+        _plan("wide", 1.0, solve=53.0, repro=53.0, bits=53.0, certified=True),
+        _plan("broken", 0.1, solve=40.0, bits=10.0, passed=False),
+    ])
+
+
+def test_chat_routes_cheapest_passing(router):
+    # "broken" is cheapest but failed validation; "cheap" is next
+    assert router.route("chat").name == "cheap"
+
+
+def test_solve_routes_highest_score(router):
+    # energy is irrelevant for solve: "wide" records the highest solve score
+    assert router.route("solve").name == "wide"
+
+
+def test_repro_routes_certified_only(router):
+    # cheapest *certified* plan — "cheap"/"broken" are cheaper but uncertified
+    assert router.route("repro").name == "mid"
+
+
+def test_explicit_plan_name_wins(router):
+    assert router.route("wide").name == "wide"
+
+
+def test_min_bits_escalates_chat(router):
+    assert router.route("chat", min_bits=20.0).name == "mid"
+    assert router.route("chat", min_bits=40.0).name == "wide"
+
+
+def test_bit_stable_constraint(router):
+    assert router.route("chat", bit_stable=True).name == "mid"
+
+
+def test_unsatisfiable_raises_typed(router):
+    with pytest.raises(RoutingError) as ei:
+        router.route("chat", min_bits=99.0)
+    assert ei.value.workload == "chat"
+    assert "99" in ei.value.reason
+    with pytest.raises(RoutingError):
+        router.route("cheap", bit_stable=True)   # explicit name, unmet
+    with pytest.raises(RoutingError):
+        router.route("no-such-class-or-plan")
+
+
+def test_router_rejects_bad_names():
+    with pytest.raises(ValueError, match="shadows"):
+        PlanRouter([_plan("chat", 0.5)])
+    with pytest.raises(ValueError, match="duplicate"):
+        PlanRouter([_plan("a", 0.5), _plan("a", 0.6)])
+
+
+def test_synthetic_manifest_roundtrip(tmp_path):
+    import json
+    man = {"plans": {
+        "good": {"arch": "x", "file": "good.json", "energy_vs_baseline": 0.3,
+                 "validated_bits": 22.0,
+                 "validation": {"logits": {"score": 22.0, "passed": True}}},
+        "no-scores": {"arch": "x", "energy_vs_baseline": 0.3,
+                      "validation": {}},
+        "bad-energy": {"arch": "x", "energy_vs_baseline": "cheap",
+                       "validation": {"logits": {"score": 9.0,
+                                                 "passed": True}}},
+    }}
+    (tmp_path / "MANIFEST.json").write_text(json.dumps(man))
+    from repro.serving import routed_plan_from_entry
+    ok = routed_plan_from_entry("good", man["plans"]["good"], str(tmp_path))
+    assert ok.scores["logits"] == 22.0 and ok.path.endswith("good.json")
+    with pytest.raises(ValueError, match="no validation"):
+        routed_plan_from_entry("no-scores", man["plans"]["no-scores"],
+                               str(tmp_path))
+    with pytest.raises(ValueError, match="energy_vs_baseline"):
+        routed_plan_from_entry("bad-energy", man["plans"]["bad-energy"],
+                               str(tmp_path))
+    with pytest.raises(RoutingError, match="no MANIFEST entry"):
+        PlanRouter.from_manifest(tmp_path, arch="unknown-arch", derive=False)
+
+
+def test_zoo_manifest_distinct_plans_per_class():
+    """The real zoo + derived variants: three classes, three distinct
+    numerics (the acceptance criterion's routing half)."""
+    r = PlanRouter.from_manifest(PLANS_DIR, arch="paper-mlp")
+    picks = {wl: r.route(wl).name for wl in ("chat", "solve", "repro")}
+    assert len(set(picks.values())) == 3
+    assert r.route("solve").scores["solve"] >= 53.0
+    assert r.route("repro").repro_certified
+    assert r.route("repro").energy < 1.0      # cheaper than the wide variant
+
+
+# ---------------------------------------------------------------------------
+# Buckets
+# ---------------------------------------------------------------------------
+
+def test_parse_buckets_sorted_dedup():
+    bs = parse_buckets("4x64, 2x32, 4x64")
+    assert [b.label for b in bs] == ["2x32", "4x64"]
+    assert bs[0].capacity == 31
+    with pytest.raises(ValueError, match="degenerate"):
+        Bucket(max_len=2, n_slots=1)
+
+
+def test_bucket_for_smallest_fit(mlp):
+    cfg, params = mlp
+    pool = BucketedEnginePool(cfg, params, "2x32,4x64")   # engines are lazy
+    assert pool.bucket_for(10, 8).label == "2x32"
+    assert pool.bucket_for(30, 8).label == "4x64"
+    with pytest.raises(AdmissionError, match="largest bucket"):
+        pool.bucket_for(60, 8)
+
+
+# ---------------------------------------------------------------------------
+# Batcher admission contract (the fixed cache-exhaustion path)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mlp():
+    cfg = get_config("paper-mlp").reduced()
+    return cfg, init(cfg, jax.random.key(0))
+
+
+def test_cache_remaining_and_refusal(mlp):
+    cfg, params = mlp
+    eng = ContinuousBatcher(cfg, params, n_slots=1, max_len=16)
+    assert eng.cache_remaining() == 15
+    # needs 4 + 12 = 16 > 15: refused up front, loudly — never truncated
+    eng.submit(Request(0, [1, 2, 3, 4], max_new=12))
+    with pytest.raises(CacheExhausted, match="16 positions"):
+        eng.run()
+    assert eng.queue and not eng.queue[0].out   # still queued, untouched
+
+
+def test_exhaustion_then_reset_recycles(mlp):
+    cfg, params = mlp
+    eng = ContinuousBatcher(cfg, params, n_slots=1, max_len=16)
+    r1 = Request(1, [5, 9, 2], max_new=6)
+    eng.submit(r1)
+    eng.run()
+    assert r1.done and len(r1.out) == 6
+    used = 15 - eng.cache_remaining()
+    assert used == len(r1.prompt) + r1.max_new - 1   # cursor = steps taken
+    # a same-sized request no longer fits the cursor's leftovers
+    r2 = Request(2, [5, 9, 2], max_new=6)
+    eng.submit(r2)
+    with pytest.raises(CacheExhausted):
+        eng.run()
+    eng.reset_cache()
+    assert eng.cache_remaining() == 15
+    eng.run()
+    assert r2.done and r2.out == r1.out       # fresh cache, same generation
+
+
+def test_reset_cache_refuses_live_slots(mlp):
+    cfg, params = mlp
+    eng = ContinuousBatcher(cfg, params, n_slots=1, max_len=32)
+    eng.submit(Request(3, [1, 2, 3], max_new=4))
+    eng.step()
+    with pytest.raises(RuntimeError, match="live slots"):
+        eng.reset_cache()
+
+
+def test_request_step_accounting_and_streaming(mlp):
+    cfg, params = mlp
+    got = []
+    req = Request(4, [7, 1, 8, 3], max_new=5, on_token=got.append)
+    eng = ContinuousBatcher(cfg, params, n_slots=2, max_len=32)
+    eng.submit(req)
+    eng.run()
+    # P prompt tokens + M generated, last one never fed: P + M - 1 steps
+    assert req.steps == 4 + 5 - 1
+    assert req.prefill_tokens == 4
+    assert req.decode_tokens == 5
+    assert got == req.out                     # streamed as they landed
+
+
+# ---------------------------------------------------------------------------
+# Engine pool + frontend e2e (the acceptance run)
+# ---------------------------------------------------------------------------
+
+def test_pool_lru_and_hits(mlp):
+    cfg, params = mlp
+    r = PlanRouter.from_manifest(PLANS_DIR, arch="paper-mlp")
+    pool = BucketedEnginePool(cfg, params, "2x16", max_live=1)
+    b = pool.buckets[0]
+    e1 = pool.get(r.route("chat"), b, "generate")
+    assert pool.get(r.route("chat"), b, "generate") is e1    # cache hit
+    pool.get(r.route("solve"), b, "generate")                # evicts idle e1
+    st = pool.stats()
+    assert st == {**st, "compiles": 2, "hits": 1, "evictions": 1,
+                  "resident": 1}
+    with pytest.raises(ValueError, match="unknown method"):
+        pool.get(r.route("chat"), b, "train")
+
+
+def test_routed_vs_dedicated_bit_identical(mlp):
+    """Two workload classes served concurrently through the routed tier must
+    equal dedicated single-plan ContinuousBatchers bit-for-bit, with every
+    engine compiled exactly once (trace_count stays 1 after serving)."""
+    cfg, params = mlp
+    router = PlanRouter.from_manifest(PLANS_DIR, arch="paper-mlp")
+    pool = BucketedEnginePool(cfg, params, "2x32", max_live=4)
+    front = RoutedFrontend(pool, router, max_live_batches=2)
+
+    prompts = [[5, 9, 2], [7, 1, 8, 3], [4, 4, 6], [9, 2, 2, 7]]
+    comps, classes = [], ["chat", "solve", "chat", "solve"]
+    for i, (p, wl) in enumerate(zip(prompts, classes)):   # interleaved
+        comps.append(front.submit(ServeRequest(uid=i, prompt=p, max_new=5,
+                                               workload=wl)))
+    front.run()
+    assert all(c.ok for c in comps)
+    by_class = {wl: [c for c in comps if c.request.workload == wl]
+                for wl in ("chat", "solve")}
+    assert {c.plan for c in by_class["chat"]} != \
+           {c.plan for c in by_class["solve"]}        # distinct zoo plans
+
+    for wl, batch in by_class.items():
+        plan = router.route(wl)
+        ded = ContinuousBatcher(cfg, params, n_slots=2, max_len=32,
+                                warmup=plan.policy())
+        refs = [Request(uid=c.request.uid, prompt=list(c.request.prompt),
+                        max_new=5) for c in batch]
+        for rr in refs:
+            ded.submit(rr)
+        ded.run()
+        for c, rr in zip(batch, refs):
+            assert c.result() == rr.out       # bit-identical
+            assert c.steps == rr.steps
+        assert ded.trace_count == 1
+
+    for eng in pool.live().values():
+        assert eng.trace_count == 1           # no recompile after warmup
+    st = front.stats()
+    assert st["classes"]["chat"]["completed"] == 2
+    assert st["classes"]["solve"]["plans"] == {"paper_mlp/fdp91": 2}
+
+
+def test_frontend_rejections_are_futures(mlp):
+    cfg, params = mlp
+    router = PlanRouter.from_manifest(PLANS_DIR, arch="paper-mlp")
+    pool = BucketedEnginePool(cfg, params, "2x16")
+    front = RoutedFrontend(pool, router)
+    # unsatisfiable constraint -> RoutingError future
+    c1 = front.submit(ServeRequest(uid=0, prompt=[1, 2], max_new=4,
+                                   workload="chat", min_bits=99.0))
+    # no bucket fits -> AdmissionError future
+    c2 = front.submit(ServeRequest(uid=1, prompt=list(range(14)), max_new=8))
+    assert c1.done and not c1.ok and isinstance(c1.error, RoutingError)
+    assert c2.done and not c2.ok and isinstance(c2.error, AdmissionError)
+    with pytest.raises(AdmissionError):
+        c2.result()
+    front.run()                               # nothing queued: no-op
+    st = front.stats()
+    assert st["classes"]["chat"]["rejected"] == 2
+
+
+def test_score_method_matches_forward(mlp):
+    import jax.numpy as jnp
+    from repro.core.dispatch import use_policy
+    from repro.models import forward
+    cfg, params = mlp
+    router = PlanRouter.from_manifest(PLANS_DIR, arch="paper-mlp")
+    plan = router.route("solve")
+    bucket = Bucket(max_len=16, n_slots=2)
+    eng = ScoreEngine(cfg, params, bucket, plan.policy())
+    prompt = [3, 11, 4, 7]
+    (got,) = eng.score_batch([prompt])
+    toks = np.zeros((2, 16), np.int32)
+    toks[0, :4] = prompt
+    with use_policy(plan.policy()):
+        logits = forward(params, cfg, {"tokens": jnp.asarray(toks)})
+    logp = jax.nn.log_softmax(logits[:, :, :cfg.vocab_size], -1)
+    want = float(sum(logp[0, j, prompt[j + 1]] for j in range(3)))
+    assert got == pytest.approx(want, rel=1e-5)
+    assert eng.trace_count == 1
