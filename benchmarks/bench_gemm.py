@@ -217,8 +217,7 @@ def run_hotpath():
 
         # the seed kernel: per-k fori_loop body at the seed's hardcoded tile
         t_seed, out_seed = _best_of(
-            lambda: kops.fdp_gemm(a, b, spec=spec, bm=SEED_TILE[0],
-                                  bn=SEED_TILE[1], bk=SEED_TILE[2],
+            lambda: kops.fdp_gemm(a, b, spec=spec, plan=GemmPlan(*SEED_TILE),
                                   impl="loop"))
         emit(f"pallas_seed_loop_w{spec.width}_"
              f"{'x'.join(map(str, SEED_TILE))}", t_seed,
@@ -228,7 +227,8 @@ def run_hotpath():
         best = (None, float("inf"), None)
         for bm, bn, bk in SWEEP_TILES:
             t, out = _best_of(
-                lambda: kops.fdp_gemm(a, b, spec=spec, bm=bm, bn=bn, bk=bk))
+                lambda: kops.fdp_gemm(a, b, spec=spec,
+                                      plan=GemmPlan(bm, bn, bk)))
             emit(f"pallas_vector_w{spec.width}_{bm}x{bn}x{bk}", t,
                  f"GFLOPs={flops/t/1e9:.3f}|speedup={t_seed/t:.1f}x",
                  shape=(M, K, N), spec=spec, impl="pallas_vector", unit="s")
@@ -237,8 +237,7 @@ def run_hotpath():
 
         plan = plan_gemm(M, N, K, fmt=FP32, spec=spec)
         t_plan, out_plan = _best_of(
-            lambda: kops.fdp_gemm(a, b, spec=spec, bm=plan.bm, bn=plan.bn,
-                                  bk=plan.bk))
+            lambda: kops.fdp_gemm(a, b, spec=spec, plan=plan))
         emit(f"pallas_vector_planned_w{spec.width}_"
              f"{plan.bm}x{plan.bn}x{plan.bk}", t_plan,
              f"GFLOPs={flops/t_plan/1e9:.3f}|source={plan.source}"
@@ -262,6 +261,79 @@ def run_hotpath():
         f"hot-path speedup {detail} never reached the 5x acceptance bar")
 
 
+# Ragged (MoE expert) GEMM: tokens sorted by expert. (T, d, f, E).
+RAGGED_CASES = [(256, 128, 128, 8)]
+QUICK_RAGGED_CASES = [(128, 64, 64, 4)]
+
+
+def _uneven_groups(T, E):
+    """Deterministic uneven segment sizes summing to T, with one
+    intentionally empty expert (the routing edge case the sorted-segment
+    kernel must not mis-walk)."""
+    w = np.arange(1, E + 1, dtype=np.int64)
+    gs = (w * T) // w.sum()
+    gs[0] += T - gs.sum()
+    if E > 2:
+        gs[0] += gs[1]
+        gs[1] = 0
+    return np.asarray(gs, np.int64)
+
+
+def run_ragged_rows(cases=RAGGED_CASES):
+    """MoE ragged-GEMM rows: XLA's native ragged_dot anchor, the grouped FDP
+    reference (every expert over every token, O(T*E*d*f) MACs, then select),
+    and the sorted-segment FDP kernel (contiguous segment walk, O(T*d*f)).
+    All three gflops figures count the *useful* work 2*T*d*f, so the
+    reference row's deficit vs the segment row is exactly the E-fold
+    wasted-MAC factor this kernel removes. Reference and segment outputs are
+    asserted bit-identical."""
+    spec = SPECS[0]
+    rng = np.random.default_rng(7)
+    for (T, d, f, E) in cases:
+        gs_np = _uneven_groups(T, E)
+        gs = jnp.asarray(gs_np, jnp.int32)
+        x = jnp.asarray(rng.standard_normal((T, d)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((E, d, f)), jnp.float32)
+        flops = 2 * T * d * f
+        tag = f"{T}x{d}x{f}_E{E}"
+
+        if hasattr(jax.lax, "ragged_dot"):
+            native = jax.jit(lambda: jax.lax.ragged_dot(x, w, gs))
+        else:  # dense one-hot contraction: still pure-XLA, still an anchor
+            seg_oh = jnp.asarray(np.repeat(np.arange(E), gs_np))
+            oh = jax.nn.one_hot(seg_oh, E, dtype=jnp.float32)
+            native = jax.jit(lambda: jnp.einsum("td,te,edf->tf", x, oh, w))
+        t_nat, _ = _best_of(native)
+        emit(f"ragged_native_{tag}", t_nat, f"GFLOPs={flops/t_nat/1e9:.3f}",
+             shape=(T, d, f), impl="native", unit="s")
+
+        # token-axis block at the mean segment size (what the dispatch
+        # ragged path deploys): boundary-tile overhead stays O(E*bm) << T
+        from repro.core.dispatch import _fit_ragged
+        plan = _fit_ragged(plan_gemm(T, f, d, fmt=FP32, spec=spec),
+                           "bm", T, E)
+        seg = np.repeat(np.arange(E), gs_np)
+
+        def reference():
+            outs = jnp.stack([kops.fdp_gemm(x, w[e], spec=spec, plan=plan)
+                              for e in range(E)])
+            return outs[seg, np.arange(T)]
+
+        t_ref, out_ref = _best_of(reference)
+        emit(f"ragged_fdp_reference_w{spec.width}_{tag}", t_ref,
+             f"GFLOPs={flops/t_ref/1e9:.3f}|grouped O(T*E) MACs",
+             shape=(T, d, f), spec=spec, impl="ragged_reference", unit="s")
+
+        t_seg, out_seg = _best_of(
+            lambda: kops.fdp_ragged_gemm(x, w, gs, spec=spec, plan=plan))
+        same = bool(jnp.array_equal(out_ref, out_seg))
+        emit(f"ragged_fdp_segment_w{spec.width}_{tag}", t_seg,
+             f"GFLOPs={flops/t_seg/1e9:.3f}|speedup={t_ref/t_seg:.1f}x"
+             f"|bitexact={same}",
+             shape=(T, d, f), spec=spec, impl="ragged_segment", unit="s")
+        assert same, "sorted-segment kernel diverged from grouped reference"
+
+
 def run(quick: bool = False, json_path: str | None = None):
     ROWS.clear()
     t0 = time.time()
@@ -269,10 +341,12 @@ def run(quick: bool = False, json_path: str | None = None):
         run_table(shapes=QUICK_SHAPES, specs=[SPECS[0]])
         run_grad_rows(shapes=QUICK_GRAD_SHAPES)
         run_native_anchors()
+        run_ragged_rows(cases=QUICK_RAGGED_CASES)
     else:
         run_table()
         run_grad_rows()
         run_hotpath()
+        run_ragged_rows()
     if json_path:
         doc = {
             "bench": "bench_gemm",

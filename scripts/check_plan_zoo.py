@@ -206,6 +206,65 @@ def check_v1_migration(fixture_path: str) -> list:
     return errors
 
 
+def check_schedules(schedules_dir: str) -> list:
+    """The GemmPlan schedule zoo lane: every checked-in schedule file must
+    load (kind/version/fingerprint), carry only deploy-legal fitted
+    schedules, and install into a cold plan cache so a warm process really
+    takes zero autotune misses on the covered signatures."""
+    from repro.core.accumulator import SAFE_CHUNK
+    from repro.core.dispatch import (GemmPlan, clear_plan_cache,
+                                     plan_cache_stats, plan_gemm)
+    from repro.core.formats import get_format
+    from repro.core.schedules import ScheduleZoo
+
+    errors = []
+    paths = sorted(glob.glob(os.path.join(schedules_dir, "*.json")))
+    if not paths:
+        return [f"no schedule files under {schedules_dir} — run "
+                "scripts/refresh_plans.py --schedules"]
+    import jax
+    for path in paths:
+        name = os.path.basename(path)
+        stem = name[:-len(".json")]
+        try:
+            zoo = ScheduleZoo.load(path)
+        except ValueError as e:
+            errors.append(f"{name}: {e}")
+            continue
+        if zoo.backend != stem:
+            errors.append(f"{name}: backend {zoo.backend!r} does not match "
+                          f"the filename")
+        if not zoo.entries:
+            errors.append(f"{name}: empty schedule zoo")
+        for (batch, m, n, k, fmt_name, spec), plan in zoo.entries.items():
+            try:
+                get_format(fmt_name)
+            except KeyError:
+                errors.append(f"{name}: unknown format {fmt_name!r} for "
+                              f"{m}x{n}x{k}")
+            if plan.bk > SAFE_CHUNK:
+                errors.append(f"{name}: {m}x{n}x{k} bk={plan.bk} exceeds "
+                              f"the SAFE_CHUNK carry-headroom bound")
+            fitted = GemmPlan(plan.bm, plan.bn, plan.bk).fit(m, n, k)
+            if fitted.tile != plan.tile:
+                errors.append(f"{name}: {m}x{n}x{k} schedule {plan.tile} is "
+                              f"not fitted (fit() gives {fitted.tile})")
+        # warm-install proof, only meaningful on the file's own backend
+        if zoo.backend == jax.default_backend() and not errors:
+            clear_plan_cache()
+            installed = zoo.install()
+            for (batch, m, n, k, fmt_name, spec) in zoo.entries:
+                plan_gemm(m, n, k, fmt=get_format(fmt_name), spec=spec,
+                          batch=batch)
+            st = plan_cache_stats()
+            if st.misses != 0 or st.persisted_loads != installed:
+                errors.append(
+                    f"{name}: warm process still misses "
+                    f"({st.misses} misses after installing {installed})")
+            clear_plan_cache()
+    return errors
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--plans", default=PLANS_DIR)
@@ -240,6 +299,16 @@ def main(argv=None):
                 print(f"    - {e}")
         else:
             print(f"[plan-zoo] {name}: OK")
+
+    errors = check_schedules(os.path.join(args.plans, "schedules"))
+    if errors:
+        failures += 1
+        print("[plan-zoo] schedule zoo: FAIL")
+        for e in errors:
+            print(f"    - {e}")
+    else:
+        print("[plan-zoo] schedule zoo: OK (loads, fitted, warm-installs "
+              "with zero misses)")
 
     fixture = os.path.join(args.plans, "fixtures", "paper_mlp.v1.json")
     errors = check_v1_migration(fixture)

@@ -40,6 +40,8 @@ Usage:
     PYTHONPATH=src python scripts/refresh_plans.py --reduced --jobs 3
     PYTHONPATH=src python scripts/refresh_plans.py --only paper_mlp --reduced \
         --check     # recompute from the saved trace, compare to checked-in
+    PYTHONPATH=src python scripts/refresh_plans.py --schedules
+        # refresh the GemmPlan schedule zoo (examples/plans/schedules/)
 """
 from __future__ import annotations
 
@@ -69,6 +71,56 @@ DEFAULT_OUT = os.path.join(os.path.dirname(__file__), os.pardir,
 from repro.workloads.base import (PROBE_BATCH as CAL_BATCH,          # noqa: E402
                                   PROBE_SEQ as CAL_SEQ,
                                   PROBE_SEED as CAL_SEED)
+
+
+# ---------------------------------------------------------------------------
+# --schedules: the GemmPlan schedule zoo (block-size schedules, not numerics)
+# ---------------------------------------------------------------------------
+# Representative GEMM signatures for the serving/CI hotpaths: decode-step
+# (M=batch), prefill (M=batch*seq) and training shapes at the reduced-config
+# scale the checked-in zoo serves. Small enough to autotune on CPU interpret
+# mode in minutes; the fit() clamp keeps every winner legal at deploy time.
+SCHEDULE_SHAPES = (
+    (8, 64, 64), (8, 128, 64),          # decode-step projections
+    (32, 64, 64), (64, 64, 64),         # small prefill
+    (64, 128, 128), (128, 128, 128),    # reduced-config train/prefill
+)
+SCHEDULE_FMTS = ("ieee_fp32", "bfloat16")
+
+
+def refresh_schedules(args) -> None:
+    """Autotune the representative GEMM signatures and persist the winners
+    as ``<out>/schedules/<backend>.json`` — the schedule zoo the launch
+    drivers preload so a warm process takes zero autotune misses."""
+    import jax
+
+    from repro.core.accumulator import AccumulatorSpec
+    from repro.core.dispatch import (clear_plan_cache, plan_cache_stats,
+                                     plan_gemm)
+    from repro.core.formats import get_format
+    from repro.core.schedules import ScheduleZoo, zoo_path
+
+    spec = AccumulatorSpec.paper_91bit()
+    backend = jax.default_backend()
+    clear_plan_cache()
+    t0 = time.time()
+    for fmt_name in SCHEDULE_FMTS:
+        fmt = get_format(fmt_name)
+        for (m, n, k) in SCHEDULE_SHAPES:
+            plan = plan_gemm(m, n, k, fmt=fmt, spec=spec, autotune=True)
+            print(f"[schedules] {fmt_name} {m}x{n}x{k}: tile={plan.tile} "
+                  f"({plan.source})")
+    zoo = ScheduleZoo.from_cache(
+        backend, meta={"generated_by": "scripts/refresh_plans.py",
+                       "shapes": [list(s) for s in SCHEDULE_SHAPES],
+                       "fmts": list(SCHEDULE_FMTS),
+                       "spec": "paper_91bit"})
+    path = zoo_path(os.path.join(args.out, "schedules"), backend)
+    zoo.save(path)
+    st = plan_cache_stats()
+    print(f"[schedules] {len(zoo.entries)} schedules "
+          f"({st.autotuned} autotuned) -> {path} "
+          f"({time.time() - t0:.0f}s)")
 
 
 def _alias_of(arch_id: str) -> str:
@@ -371,8 +423,15 @@ def main(argv=None):
     ap.add_argument("--out", default=DEFAULT_OUT)
     ap.add_argument("--no-manifest", action="store_true",
                     help="skip the MANIFEST rebuild (used by --jobs children)")
+    ap.add_argument("--schedules", action="store_true",
+                    help="refresh the GemmPlan schedule zoo "
+                         "(<out>/schedules/<backend>.json) instead of the "
+                         "precision-plan sweep")
     args = ap.parse_args(argv)
     args.out = os.path.abspath(args.out)
+    if args.schedules:
+        refresh_schedules(args)
+        return
     bad = set(args.phases.split(",")) - {"fwd", "bwd"}
     if bad:
         raise SystemExit(f"--phases: unknown namespaces {sorted(bad)} "

@@ -12,16 +12,19 @@ from .formats import (BF16, FP16, FP32, POSIT8_0, POSIT16_1, POSIT32_2,
 from .fdp import dd_dot, fdp_dot, fdp_gemm, fma_dot
 from .generator import (DatapathReport, GeneratedGemm, datapath_report,
                         generate_gemm)
-from .dispatch import (FDP91, GemmPlan, GemmSite, plan_gemm, plan_cache_info,
-                       policy_from_plan, register_plan, reset_sites_seen,
-                       sites_seen, widen_config)
+from .dispatch import (FDP91, GemmPlan, GemmSite, PlanCacheStats, plan_gemm,
+                       plan_cache_info, plan_cache_stats, policy_from_plan,
+                       register_plan, reset_sites_seen, sites_seen,
+                       widen_config)
+from .schedules import ScheduleZoo, preload_schedules
 
 __all__ = [
     "AccumulatorSpec", "SAFE_CHUNK", "FP32", "BF16", "FP16",
     "POSIT16_1", "POSIT32_2", "POSIT8_0", "FloatFormat", "PositFormat",
     "get_format", "fdp_dot", "fdp_gemm", "fma_dot", "dd_dot",
     "generate_gemm", "GeneratedGemm", "DatapathReport", "datapath_report",
-    "FDP91", "GemmPlan", "GemmSite", "plan_gemm", "plan_cache_info",
-    "policy_from_plan", "register_plan", "reset_sites_seen", "sites_seen",
-    "widen_config",
+    "FDP91", "GemmPlan", "GemmSite", "PlanCacheStats", "plan_gemm",
+    "plan_cache_info", "plan_cache_stats", "policy_from_plan",
+    "register_plan", "reset_sites_seen", "sites_seen", "widen_config",
+    "ScheduleZoo", "preload_schedules",
 ]

@@ -92,17 +92,17 @@ def generate_gemm(spec: AccumulatorSpec | None,
     if target == "pallas":
         from repro.kernels import ops as kops
 
+        from . import dispatch
+
         if tile is None:
-            from . import dispatch
 
             def fn(a, b):
                 p = dispatch.plan_gemm(a.shape[0], b.shape[1], a.shape[1],
                                        fmt=fmt, spec=spec)
-                return kops.fdp_gemm(a, b, spec=spec, fmt=fmt,
-                                     bm=p.bm, bn=p.bn, bk=p.bk)
+                return kops.fdp_gemm(a, b, spec=spec, fmt=fmt, plan=p)
         else:
             fn = partial(kops.fdp_gemm, spec=spec, fmt=fmt,
-                         bm=tile[0], bn=tile[1], bk=tile[2])
+                         plan=dispatch.GemmPlan(*tile))
         rep = _report("fdp_pallas", fmt, spec, "pallas", tile)
         return GeneratedGemm(fn, rep)
 

@@ -1,0 +1,182 @@
+"""Persisted GemmPlan schedules — the schedule zoo.
+
+``GemmPlan`` autotuning measures block-size candidates on the running host
+and caches the winners in the process-global plan cache — and forgets
+everything at process exit. This module makes those schedules first-class
+versioned artifacts next to the plan zoo (the TVM matmul-generator and
+GEMMbench treatment: autotuned schedules are worth versioning, not warmup
+costs): a ``ScheduleZoo`` snapshots the plan cache for one backend, persists
+it as fingerprinted + schema-versioned JSON (mirroring
+``repro.numerics.CalibrationTrace``), and installs back into the cache so a
+warm process takes **zero** autotune misses.
+
+Layout: one file per backend under ``examples/plans/schedules/<backend>.json``,
+refreshed by ``scripts/refresh_plans.py --schedules`` and validated in CI by
+``scripts/check_plan_zoo.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Optional
+
+from . import dispatch
+from .accumulator import SAFE_CHUNK, AccumulatorSpec
+from .dispatch import GemmPlan
+
+SCHEDULE_VERSION = 1
+SCHEDULE_KIND = "repro.core.ScheduleZoo"
+
+# Default checked-in location, next to the plan zoo.
+DEFAULT_SCHEDULE_DIR = os.path.join("examples", "plans", "schedules")
+
+
+def schedule_fingerprint() -> str:
+    """Fingerprint of the autotune configuration a zoo file caches results
+    for: the candidate tile set, the carry-headroom bound, and the timing
+    discipline. Changing any of these invalidates persisted schedules —
+    the measurements would no longer mean the same thing."""
+    cfg = {
+        "autotune_candidates": dispatch.AUTOTUNE_CANDIDATES,
+        "safe_chunk": SAFE_CHUNK,
+        "measure": {"reps": dispatch.MEASURE_REPS,
+                    "min_seconds": dispatch.MEASURE_MIN_SECONDS},
+    }
+    blob = json.dumps(cfg, sort_keys=True, default=repr)
+    return hashlib.sha256(blob.encode("utf-8")).hexdigest()[:16]
+
+
+def _spec_doc(spec: AccumulatorSpec) -> dict:
+    return {"ovf": spec.ovf, "msb": spec.msb, "lsb": spec.lsb,
+            "round_mode": spec.round_mode,
+            "overflow_mode": spec.overflow_mode}
+
+
+@dataclasses.dataclass
+class ScheduleZoo:
+    """All persisted block-size schedules for one backend.
+
+    ``entries`` maps the plan-cache problem signature — ``(batch, m, n, k,
+    fmt_name, AccumulatorSpec)`` — to its ``GemmPlan``. The backend lives on
+    the zoo, not the key: schedules measured on one backend say nothing
+    about another.
+    """
+
+    backend: str
+    entries: dict
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def from_cache(cls, backend: Optional[str] = None,
+                   meta: Optional[dict] = None) -> "ScheduleZoo":
+        """Snapshot the process-global plan cache for ``backend`` (default:
+        the current JAX backend)."""
+        import jax
+        backend = backend or jax.default_backend()
+        entries = {}
+        with dispatch._PLAN_LOCK:
+            for key, plan in dispatch._PLAN_CACHE.items():
+                batch, m, n, k, fmt_name, spec, be = key
+                if be == backend:
+                    entries[(batch, m, n, k, fmt_name, spec)] = plan
+        return cls(backend=backend, entries=entries, meta=dict(meta or {}))
+
+    def install(self, *, source: str = "persisted") -> int:
+        """Install this zoo's schedules into the process-global plan cache
+        (marked ``source="persisted"``) and count them in
+        ``PlanCacheStats.persisted_loads``. Explicit ``register_plan``
+        overrides are never clobbered. Returns the number installed."""
+        installed = 0
+        with dispatch._PLAN_LOCK:
+            for (batch, m, n, k, fmt_name, spec), plan in self.entries.items():
+                key = (batch, m, n, k, fmt_name, spec, self.backend)
+                cached = dispatch._PLAN_CACHE.get(key)
+                if cached is not None and cached.source == "override":
+                    continue
+                dispatch._PLAN_CACHE[key] = dataclasses.replace(
+                    plan, source=source)
+                installed += 1
+            dispatch._PLAN_STATS["persisted_loads"] += installed
+        return installed
+
+    def save(self, path) -> None:
+        """Serialize to versioned JSON (schema + fingerprint headers first,
+        entries sorted — byte-stable for a given cache state)."""
+        rows = []
+        for (batch, m, n, k, fmt_name, spec), plan in sorted(
+                self.entries.items(),
+                key=lambda kv: (kv[0][4], repr(kv[0][5]), kv[0][:4])):
+            rows.append({"batch": batch, "m": m, "n": n, "k": k,
+                         "fmt": fmt_name, "spec": _spec_doc(spec),
+                         "bm": plan.bm, "bn": plan.bn, "bk": plan.bk,
+                         "source": plan.source})
+        doc = {
+            "version": SCHEDULE_VERSION,
+            "kind": SCHEDULE_KIND,
+            "fingerprint": schedule_fingerprint(),
+            "backend": self.backend,
+            "meta": self.meta,
+            "entries": rows,
+        }
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+
+    @classmethod
+    def load(cls, path, *, check_fingerprint: bool = True) -> "ScheduleZoo":
+        """Load and validate a zoo file. Rejects documents of the wrong
+        kind, from a future schema version, or (by default) whose autotune
+        configuration no longer matches this build — a stale schedule is a
+        measurement of a different search space."""
+        with open(path) as f:
+            doc = json.load(f)
+        kind = doc.get("kind")
+        if kind != SCHEDULE_KIND:
+            raise ValueError(
+                f"{path} is not a schedule zoo (kind={kind!r}, "
+                f"expected {SCHEDULE_KIND!r})")
+        version = doc.get("version")
+        if not isinstance(version, int) or version > SCHEDULE_VERSION:
+            raise ValueError(
+                f"{path} has schema version {version!r}, this build reads "
+                f"<= {SCHEDULE_VERSION} — refusing to guess its semantics")
+        fp, want = doc.get("fingerprint"), schedule_fingerprint()
+        if check_fingerprint and fp != want:
+            raise ValueError(
+                f"{path} fingerprint {fp!r} != current autotune config "
+                f"{want!r} — the candidate set or timing discipline changed; "
+                f"refresh with scripts/refresh_plans.py --schedules")
+        entries = {}
+        for row in doc.get("entries", []):
+            spec = AccumulatorSpec(**row["spec"])
+            key = (int(row["batch"]), int(row["m"]), int(row["n"]),
+                   int(row["k"]), row["fmt"], spec)
+            entries[key] = GemmPlan(int(row["bm"]), int(row["bn"]),
+                                    int(row["bk"]),
+                                    source=row.get("source", "persisted"))
+        return cls(backend=doc["backend"], entries=entries,
+                   meta=doc.get("meta", {}))
+
+
+def zoo_path(directory: Optional[str] = None,
+             backend: Optional[str] = None) -> str:
+    import jax
+    return os.path.join(directory or DEFAULT_SCHEDULE_DIR,
+                        f"{backend or jax.default_backend()}.json")
+
+
+def preload_schedules(directory: Optional[str] = None,
+                      backend: Optional[str] = None) -> int:
+    """Warm the plan cache from the checked-in schedule zoo for the current
+    backend, if a file exists. Returns the number of schedules installed
+    (0 when no zoo is checked in for this backend) — after which a process
+    serving the covered shapes takes zero autotune misses. Called by the
+    serve/train/dryrun launch drivers and the serving CLI at startup."""
+    path = zoo_path(directory, backend)
+    if not os.path.exists(path):
+        return 0
+    return ScheduleZoo.load(path).install()

@@ -182,6 +182,261 @@ def fdp_gemm_pallas(a: jax.Array, b: jax.Array, *, spec: AccumulatorSpec,
     )(a, b)
 
 
+# ---------------------------------------------------------------------------
+# Sorted-segment (ragged / MoE) kernels
+#
+# Tokens arrive sorted by expert (models/moe.py sort-based dispatch), so a
+# grouped GEMM need not run every expert over every row: the grid walks one
+# tile per (row-block, expert) *segment intersection* — at most
+# ``T/bm + E - 1`` tiles by telescoping, since the segment id is
+# non-decreasing — and a scalar-prefetched metadata table steers each tile's
+# block index maps to its expert's weight (or output) block. Rows outside a
+# tile's segment are masked to the zero pattern before decode; zero products
+# contribute nothing to the limb register, so accumulating tiles of one
+# output block in sequence is exact and order-invariant (bit-identical to
+# one dispatched GEMM per expert).
+# ---------------------------------------------------------------------------
+_META_ROWS = 6            # (block, group, row_lo, row_hi, first, last)
+
+
+def ragged_num_tiles(n_rows: int, block: int, num_groups: int) -> int:
+    """Static tile count of the sorted-segment grids: one tile per
+    (row-block, group) intersection, ≤ n_rows/block + num_groups - 1."""
+    assert n_rows % block == 0, (n_rows, block)
+    return n_rows // block + num_groups - 1
+
+
+def _ragged_meta(group_sizes: jax.Array, n_rows: int, block: int, *,
+                 cover_all_groups: bool) -> jax.Array:
+    """Build the (6, NT) int32 scalar-prefetch table for a sorted-segment
+    grid over ``n_rows`` (padded, block-multiple) rows in ``num_groups``
+    groups. Rows: tile's row-block index, its group index, the global row
+    bounds [lo, hi) it owns, and first/last markers for its accumulation
+    window (per row-block for the forward, per group when
+    ``cover_all_groups`` — the wgrad layout, where every group's output
+    block must be visited even for zero-size groups).
+
+    Shapes are static (NT from the telescoping bound); values are data.
+    Tiles beyond the used count collapse to empty [0, 0) windows on the last
+    block/group with first=last=0, so they accumulate nothing and never
+    emit."""
+    E = int(group_sizes.shape[0])
+    Bg = n_rows // block
+    NT = ragged_num_tiles(n_rows, block, E)
+    gs = group_sizes.astype(jnp.int32)
+    bounds = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(gs, dtype=jnp.int32)])      # (E+1,)
+    row0 = jnp.arange(Bg, dtype=jnp.int32) * block
+    seg = lambda r: jnp.clip(
+        jnp.searchsorted(bounds[1:], r, side="right"), 0, E - 1
+    ).astype(jnp.int32)
+    e_first = seg(row0)
+    e_last = seg(row0 + block - 1)
+    if cover_all_groups:
+        # wgrad: groups skipped between consecutive row-blocks (zero-size
+        # groups) attach to the later block, and the end blocks stretch to
+        # group 0 / E-1, so every output block gets (at least) one tile.
+        e_first = jnp.concatenate([jnp.zeros((1,), jnp.int32), e_last[:-1]])
+        e_last = e_last.at[-1].set(E - 1)
+
+    tiles = e_last - e_first + 1                                     # (Bg,)
+    off = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                           jnp.cumsum(tiles, dtype=jnp.int32)])      # (Bg+1,)
+    n_used = off[Bg]
+    t_ids = jnp.arange(NT, dtype=jnp.int32)
+    blk = jnp.clip(jnp.searchsorted(off[1:], t_ids, side="right"),
+                   0, Bg - 1).astype(jnp.int32)
+    grp = e_first[blk] + (t_ids - off[blk])
+    valid = t_ids < n_used
+    # spare tiles park on the last block/group (output index maps stay
+    # non-decreasing) with an empty row window
+    grp = jnp.where(valid, grp, E - 1)
+    lo = jnp.where(valid, jnp.maximum(bounds[grp], blk * block), 0)
+    hi = jnp.where(valid,
+                   jnp.minimum(bounds[grp + 1], (blk + 1) * block), 0)
+    if cover_all_groups:
+        prev_grp = jnp.concatenate([jnp.full((1,), -1, jnp.int32), grp[:-1]])
+        first = valid & (grp != prev_grp)
+        last = valid & ((t_ids == n_used - 1) | (t_ids + 1 >= NT)
+                        | (jnp.concatenate(
+                            [grp[1:], jnp.full((1,), -1, jnp.int32)]) != grp))
+    else:
+        first = valid & (t_ids == off[blk])
+        last = valid & (t_ids == off[blk] + tiles[blk] - 1)
+    return jnp.stack([blk, grp, lo, hi,
+                      first.astype(jnp.int32), last.astype(jnp.int32)])
+
+
+def _masked_rows(ref, block_idx, block: int, lo, hi):
+    """Zero rows of a (block, ...) operand tile outside its segment's global
+    [lo, hi) window. Exact for every format: 0.0 is the zero float carrier
+    and 0 the zero posit pattern, and zero products add nothing to the limb
+    register."""
+    rows = block_idx * block + jax.lax.broadcasted_iota(
+        jnp.int32, (block, 1), 0)
+    mask = (rows >= lo) & (rows < hi)
+    x = ref[...]
+    return jnp.where(mask, x, jnp.zeros((), x.dtype))
+
+
+def fdp_ragged_kernel(meta_ref, x_ref, w_ref, o_ref, acc_ref, *,
+                      spec: AccumulatorSpec, fmt, bm: int, bk: int,
+                      k_grid: int, kc: int):
+    """Sorted-segment forward body. Grid (Ng, NT, Kg), K innermost:
+    x (bm, bk) at (block[t], k), w (1, bk, bn) at (group[t], k, j),
+    o (bm, bn) at (block[t], j). The limb scratch spans all tiles of one
+    row-block (their row windows are disjoint): zeroed on the block's first
+    tile, emitted on its last."""
+    t = pl.program_id(1)
+    kidx = pl.program_id(2)
+    tm = meta_ref[0, t]
+    lo = meta_ref[2, t]
+    hi = meta_ref[3, t]
+    first = meta_ref[4, t]
+    last = meta_ref[5, t]
+
+    @pl.when((first == 1) & (kidx == 0))
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = _masked_rows(x_ref, tm, bm, lo, hi)            # (bm, bk)
+    da = fmt.decode(x)                                 # fields (bm, bk)
+    db = fmt.decode(w_ref[0])                          # fields (bk, bn)
+    da = jax.tree.map(lambda v: v.T, da)               # fields (bk, bm)
+
+    total = acc_ref[...]
+    for k0 in range(0, bk, kc):
+        dak = jax.tree.map(lambda v: v[k0:k0 + kc, :, None], da)
+        dbk = jax.tree.map(lambda v: v[k0:k0 + kc, None, :], db)
+        total = total + acc.product_limb_block_sum(spec, dak, dbk, axis=0)
+    acc_ref[...] = acc.carry_normalize(spec, total)
+
+    @pl.when((last == 1) & (kidx == k_grid - 1))
+    def _emit():
+        o_ref[...] = acc.to_float(spec, acc_ref[...])
+
+
+def fdp_ragged_gemm_pallas(x: jax.Array, w: jax.Array,
+                           group_sizes: jax.Array, *, spec: AccumulatorSpec,
+                           fmt, bm: int = 32, bn: int = 32, bk: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    """Raw sorted-segment grouped GEMM: x (T, d) @ w[group(t)] -> (T, f).
+    T/d/f must be block multiples (ops.py pads); rows beyond
+    sum(group_sizes) yield zeros."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    T, d = x.shape
+    E, d2, f = w.shape
+    assert d == d2, (x.shape, w.shape)
+    assert T % bm == 0 and f % bn == 0 and d % bk == 0, (T, d, f, bm, bn, bk)
+    assert bk <= MAX_BK, (
+        f"bk={bk} exceeds SAFE_CHUNK={SAFE_CHUNK} carry headroom")
+    L = spec.num_limbs
+    NT = ragged_num_tiles(T, bm, E)
+    k_grid = d // bk
+    meta = _ragged_meta(group_sizes, T, bm, cover_all_groups=False)
+    kc = _k_subchunk(bm, bn, bk, L, interpret)
+
+    kernel = functools.partial(
+        fdp_ragged_kernel, spec=spec, fmt=fmt, bm=bm, bk=bk, k_grid=k_grid,
+        kc=kc)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(f // bn, NT, k_grid),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda j, t, k, meta: (meta[0, t], k)),
+            pl.BlockSpec((1, bk, bn),
+                         lambda j, t, k, meta: (meta[1, t], k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn),
+                               lambda j, t, k, meta: (meta[0, t], j)),
+        scratch_shapes=_scratch(bm, bn, L),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, f), jnp.float32),
+        interpret=interpret,
+    )(meta, x, w)
+
+
+def fdp_ragged_dw_kernel(meta_ref, x_ref, g_ref, o_ref, acc_ref, *,
+                         spec: AccumulatorSpec, fmt, bkt: int, kc: int):
+    """Sorted-segment wgrad body. Grid (Mg, Ng, NT), tiles innermost:
+    x (bkt, bm) at (block[t], i), g (bkt, bn) at (block[t], j),
+    o (1, bm, bn) at (group[t], i, j). The contraction dim is the ragged
+    token dim; the limb scratch spans all tiles of one *group* (first/last
+    markers are per group), so zero-size groups emit exact zeros from their
+    single empty tile."""
+    t = pl.program_id(2)
+    tb = meta_ref[0, t]
+    lo = meta_ref[2, t]
+    hi = meta_ref[3, t]
+    first = meta_ref[4, t]
+    last = meta_ref[5, t]
+
+    @pl.when(first == 1)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xm = _masked_rows(x_ref, tb, bkt, lo, hi)          # (bkt, bm), k-major
+    da = fmt.decode(xm)
+    db = fmt.decode(g_ref[...])                        # fields (bkt, bn)
+
+    total = acc_ref[...]
+    for k0 in range(0, bkt, kc):
+        dak = jax.tree.map(lambda v: v[k0:k0 + kc, :, None], da)
+        dbk = jax.tree.map(lambda v: v[k0:k0 + kc, None, :], db)
+        total = total + acc.product_limb_block_sum(spec, dak, dbk, axis=0)
+    acc_ref[...] = acc.carry_normalize(spec, total)
+
+    @pl.when(last == 1)
+    def _emit():
+        o_ref[...] = acc.to_float(spec, acc_ref[...])[None]
+
+
+def fdp_ragged_dw_pallas(x: jax.Array, g: jax.Array, group_sizes: jax.Array,
+                         *, spec: AccumulatorSpec, fmt, bm: int = 32,
+                         bn: int = 32, bk: int = 128,
+                         interpret: bool = True) -> jax.Array:
+    """Raw sorted-segment grouped weight gradient:
+    dW[e] = x[rows of e]ᵀ @ g[rows of e] -> (E, d, f). ``bk`` blocks the
+    ragged token dim (T must be a bk multiple; ops.py pads)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    T, d = x.shape
+    T2, f = g.shape
+    assert T == T2, (x.shape, g.shape)
+    E = int(group_sizes.shape[0])
+    assert T % bk == 0 and d % bm == 0 and f % bn == 0, (T, d, f, bm, bn, bk)
+    assert bk <= MAX_BK, (
+        f"bk={bk} exceeds SAFE_CHUNK={SAFE_CHUNK} carry headroom")
+    L = spec.num_limbs
+    NT = ragged_num_tiles(T, bk, E)
+    meta = _ragged_meta(group_sizes, T, bk, cover_all_groups=True)
+    kc = _k_subchunk(bm, bn, bk, L, interpret)
+
+    kernel = functools.partial(
+        fdp_ragged_dw_kernel, spec=spec, fmt=fmt, bkt=bk, kc=kc)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(d // bm, f // bn, NT),
+        in_specs=[
+            pl.BlockSpec((bk, bm), lambda i, j, t, meta: (meta[0, t], i)),
+            pl.BlockSpec((bk, bn), lambda i, j, t, meta: (meta[0, t], j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn),
+                               lambda i, j, t, meta: (meta[1, t], i, j)),
+        scratch_shapes=_scratch(bm, bn, L),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((E, d, f), jnp.float32),
+        interpret=interpret,
+    )(meta, x, g)
+
+
 def fdp_gemm_pallas_batched(a: jax.Array, b: jax.Array, *,
                             spec: AccumulatorSpec, fmt, bm: int = 128,
                             bn: int = 128, bk: int = 512,

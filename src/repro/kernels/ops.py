@@ -3,79 +3,128 @@
 Handles non-block-multiple shapes by zero padding (exact: zero products
 contribute nothing to the fixed-point register in either rounding mode),
 batch-dim broadcasting for N-D inputs, and picks interpret mode automatically
-off-TPU. Block sizes come from the caller — normally a ``GemmPlan`` resolved
-by ``repro.core.dispatch`` — and are validated against the ``SAFE_CHUNK``
-carry-headroom bound shared with the kernel.
+off-TPU.
+
+Tiling is **GemmPlan-first**: every entry point takes ``plan: GemmPlan``
+(normally resolved by ``repro.core.dispatch`` from the plan cache / schedule
+zoo) and clamps it through ``GemmPlan.fit`` — the one place a deployable
+schedule is constructed, enforcing the ``SAFE_CHUNK`` carry-headroom bound
+shared with the kernel. The loose ``bm``/``bn``/``bk`` ints from the pre-zoo
+API are kept one release behind a DeprecationWarning.
 """
 
 from __future__ import annotations
 
+import warnings
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.accumulator import AccumulatorSpec
+from repro.core.dispatch import GemmPlan
 from repro.core.formats import FP32
 
-from .fdp_gemm import MAX_BK, fdp_gemm_pallas, fdp_gemm_pallas_batched
+from .fdp_gemm import (MAX_BK, fdp_gemm_pallas, fdp_gemm_pallas_batched,
+                       fdp_ragged_dw_pallas, fdp_ragged_gemm_pallas)
+
+# Pre-plan default tile, used when a caller passes neither plan nor the
+# deprecated loose ints (matches the old keyword defaults).
+_DEFAULT_TILE = (32, 32, 128)
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _ceil(x: int, base: int = 8) -> int:
-    return -(-x // base) * base
+def resolve_plan(plan, bm, bn, bk, M: int, N: int, K: int) -> GemmPlan:
+    """Normalize the tiling arguments of one kernel call into a fitted
+    GemmPlan. ``plan`` is the supported spelling; loose ``bm``/``bn``/``bk``
+    ints are deprecated (one release) and folded into a plan here."""
+    if (bm, bn, bk) != (None, None, None):
+        if plan is not None:
+            raise TypeError(
+                "pass tiling as plan=GemmPlan(...) only — mixing plan= with "
+                "the deprecated bm=/bn=/bk= ints would make two sources of "
+                "truth for one schedule")
+        warnings.warn(
+            "bm=/bn=/bk= tiling ints are deprecated; pass "
+            "plan=GemmPlan(bm, bn, bk) (kept one release)",
+            DeprecationWarning, stacklevel=3)
+        dm, dn, dk = _DEFAULT_TILE
+        plan = GemmPlan(bm if bm is not None else dm,
+                        bn if bn is not None else dn,
+                        bk if bk is not None else dk)
+    elif plan is None:
+        plan = GemmPlan(*_DEFAULT_TILE)
+    return plan.fit(M, N, K)
 
 
 def _fit_blocks(M: int, N: int, K: int, bm: int, bn: int, bk: int):
-    """Clamp requested blocks to the (8-aligned) problem size and the
-    SAFE_CHUNK carry-headroom bound."""
-    return (min(bm, _ceil(M)), min(bn, _ceil(N)),
-            min(min(bk, MAX_BK), _ceil(K)))
+    """Deprecated: ``GemmPlan.fit`` is the one schedule constructor now."""
+    warnings.warn("_fit_blocks is deprecated; use GemmPlan(bm, bn, bk)"
+                  ".fit(M, N, K)", DeprecationWarning, stacklevel=2)
+    return GemmPlan(bm, bn, bk).fit(M, N, K).tile
 
 
 @partial(jax.jit,
          static_argnames=("spec", "fmt", "bm", "bn", "bk", "interpret", "impl"))
-def fdp_gemm(a: jax.Array, b: jax.Array, *, spec: AccumulatorSpec, fmt=FP32,
-             bm: int = 32, bn: int = 32, bk: int = 128,
-             interpret: bool | None = None, impl: str = "vector") -> jax.Array:
-    """GEMM with tailored FDP accumulation: (M,K)@(K,N) -> (M,N) f32."""
+def _fdp_gemm_jit(a, b, *, spec, fmt, bm, bn, bk, interpret, impl):
     M, K = a.shape
     _, N = b.shape
-    bm_, bn_, bk_ = _fit_blocks(M, N, K, bm, bn, bk)
-    pm, pn, pk = (-M) % bm_, (-N) % bn_, (-K) % bk_
+    pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
     if pm or pk:
         a = jnp.pad(a, ((0, pm), (0, pk)))
     if pk or pn:
         b = jnp.pad(b, ((0, pk), (0, pn)))
     interp = (not _on_tpu()) if interpret is None else interpret
-    out = fdp_gemm_pallas(a, b, spec=spec, fmt=fmt, bm=bm_, bn=bn_, bk=bk_,
+    out = fdp_gemm_pallas(a, b, spec=spec, fmt=fmt, bm=bm, bn=bn, bk=bk,
                           interpret=interp, impl=impl)
     return out[:M, :N]
 
 
+def fdp_gemm(a: jax.Array, b: jax.Array, *, spec: AccumulatorSpec, fmt=FP32,
+             plan: GemmPlan | None = None,
+             bm: int | None = None, bn: int | None = None,
+             bk: int | None = None, interpret: bool | None = None,
+             impl: str = "vector") -> jax.Array:
+    """GEMM with tailored FDP accumulation: (M,K)@(K,N) -> (M,N) f32."""
+    M, K = a.shape
+    _, N = b.shape
+    p = resolve_plan(plan, bm, bn, bk, M, N, K)
+    return _fdp_gemm_jit(a, b, spec=spec, fmt=fmt, bm=p.bm, bn=p.bn, bk=p.bk,
+                         interpret=interpret, impl=impl)
+
+
 @partial(jax.jit,
          static_argnames=("spec", "fmt", "bm", "bn", "bk", "interpret"))
-def fdp_gemm_batched(a: jax.Array, b: jax.Array, *, spec: AccumulatorSpec,
-                     fmt=FP32, bm: int = 32, bn: int = 32, bk: int = 128,
-                     interpret: bool | None = None) -> jax.Array:
-    """Batched GEMM through the native 4-D grid: (B,M,K)@(B,K,N) -> (B,M,N)
-    f32 as one pallas_call (the batch dim needs no padding — its block is 1)."""
+def _fdp_gemm_batched_jit(a, b, *, spec, fmt, bm, bn, bk, interpret):
     B, M, K = a.shape
     B2, K2, N = b.shape
     assert B == B2 and K == K2, (a.shape, b.shape)
-    bm_, bn_, bk_ = _fit_blocks(M, N, K, bm, bn, bk)
-    pm, pn, pk = (-M) % bm_, (-N) % bn_, (-K) % bk_
+    pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
     if pm or pk:
         a = jnp.pad(a, ((0, 0), (0, pm), (0, pk)))
     if pk or pn:
         b = jnp.pad(b, ((0, 0), (0, pk), (0, pn)))
     interp = (not _on_tpu()) if interpret is None else interpret
-    out = fdp_gemm_pallas_batched(a, b, spec=spec, fmt=fmt, bm=bm_, bn=bn_,
-                                  bk=bk_, interpret=interp)
+    out = fdp_gemm_pallas_batched(a, b, spec=spec, fmt=fmt, bm=bm, bn=bn,
+                                  bk=bk, interpret=interp)
     return out[:, :M, :N]
+
+
+def fdp_gemm_batched(a: jax.Array, b: jax.Array, *, spec: AccumulatorSpec,
+                     fmt=FP32, plan: GemmPlan | None = None,
+                     bm: int | None = None, bn: int | None = None,
+                     bk: int | None = None,
+                     interpret: bool | None = None) -> jax.Array:
+    """Batched GEMM through the native 4-D grid: (B,M,K)@(B,K,N) -> (B,M,N)
+    f32 as one pallas_call (the batch dim needs no padding — its block is 1)."""
+    _, M, K = a.shape
+    _, _, N = b.shape
+    p = resolve_plan(plan, bm, bn, bk, M, N, K)
+    return _fdp_gemm_batched_jit(a, b, spec=spec, fmt=fmt, bm=p.bm, bn=p.bn,
+                                 bk=p.bk, interpret=interpret)
 
 
 def matmul_batching(f2d, f3d):
@@ -109,12 +158,101 @@ def matmul_batching(f2d, f3d):
 
 
 def fdp_gemm_nd(a: jax.Array, b: jax.Array, *, spec: AccumulatorSpec,
-                fmt=FP32, bm: int = 32, bn: int = 32, bk: int = 128,
+                fmt=FP32, plan: GemmPlan | None = None,
+                bm: int | None = None, bn: int | None = None,
+                bk: int | None = None,
                 interpret: bool | None = None) -> jax.Array:
     """jnp.matmul-shaped entry point: 1-D promotion, numpy broadcasting of
     leading batch dims, then the 2-D kernel or the native batched grid."""
-    f2d = lambda x, y: fdp_gemm(x, y, spec=spec, fmt=fmt, bm=bm, bn=bn,
-                                bk=bk, interpret=interpret)
-    f3d = lambda x, y: fdp_gemm_batched(x, y, spec=spec, fmt=fmt, bm=bm,
-                                        bn=bn, bk=bk, interpret=interpret)
+    f2d = lambda x, y: fdp_gemm(x, y, spec=spec, fmt=fmt, plan=plan, bm=bm,
+                                bn=bn, bk=bk, interpret=interpret)
+    f3d = lambda x, y: fdp_gemm_batched(x, y, spec=spec, fmt=fmt, plan=plan,
+                                        bm=bm, bn=bn, bk=bk,
+                                        interpret=interpret)
     return matmul_batching(f2d, f3d)(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Sorted-segment (ragged / MoE) entry points
+# ---------------------------------------------------------------------------
+@partial(jax.jit,
+         static_argnames=("spec", "fmt", "bm", "bn", "bk", "interpret"))
+def _fdp_ragged_gemm_jit(x, w, group_sizes, *, spec, fmt, bm, bn, bk,
+                         interpret):
+    T, d = x.shape
+    E, d2, f = w.shape
+    assert d == d2, (x.shape, w.shape)
+    pm, pn, pk = (-T) % bm, (-f) % bn, (-d) % bk
+    if pm or pk:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+    if pk or pn:
+        w = jnp.pad(w, ((0, 0), (0, pk), (0, pn)))
+    interp = (not _on_tpu()) if interpret is None else interpret
+    out = fdp_ragged_gemm_pallas(x, w, group_sizes.astype(jnp.int32),
+                                 spec=spec, fmt=fmt, bm=bm, bn=bn, bk=bk,
+                                 interpret=interp)
+    return out[:T, :f]
+
+
+def fdp_ragged_gemm(x: jax.Array, w: jax.Array, group_sizes: jax.Array, *,
+                    spec: AccumulatorSpec, fmt=FP32,
+                    plan: GemmPlan | None = None,
+                    interpret: bool | None = None) -> jax.Array:
+    """Sorted-segment grouped GEMM: ``x (T, d)`` rows sorted by group,
+    ``w (E, d, f)``, ``group_sizes (E,)`` -> ``(T, f)`` f32.
+
+    Row ``t`` contracts against its group's weight matrix through the exact
+    ⟨ovf,msb,lsb⟩ datapath in O(T·d·f) MACs: the Pallas grid walks one tile
+    per (row-block, group) segment intersection — ``T/bm + E - 1`` tiles, not
+    ``E`` passes over all ``T`` rows — with a scalar-prefetched index map
+    picking each tile's expert weight block. Rows beyond ``sum(group_sizes)``
+    produce zeros (matching ``jax.lax.ragged_dot``). Bit-identical to
+    dispatching one GEMM per group: exact limb accumulation is
+    order-invariant and rounds once at read-out.
+    """
+    T, d = x.shape
+    f = w.shape[2]
+    p = resolve_plan(plan, None, None, None, T, f, d)
+    return _fdp_ragged_gemm_jit(x, w, group_sizes, spec=spec, fmt=fmt,
+                                bm=p.bm, bn=p.bn, bk=p.bk, interpret=interpret)
+
+
+@partial(jax.jit,
+         static_argnames=("spec", "fmt", "bm", "bn", "bk", "interpret"))
+def _fdp_ragged_dw_jit(x, g, group_sizes, *, spec, fmt, bm, bn, bk,
+                       interpret):
+    T, d = x.shape
+    T2, f = g.shape
+    assert T == T2, (x.shape, g.shape)
+    pm, pn, pk = (-d) % bm, (-f) % bn, (-T) % bk
+    if pk or pm:
+        x = jnp.pad(x, ((0, pk), (0, pm)))
+    if pk or pn:
+        g = jnp.pad(g, ((0, pk), (0, pn)))
+    interp = (not _on_tpu()) if interpret is None else interpret
+    out = fdp_ragged_dw_pallas(x, g, group_sizes.astype(jnp.int32),
+                               spec=spec, fmt=fmt, bm=bm, bn=bn, bk=bk,
+                               interpret=interp)
+    return out[:, :d, :f]
+
+
+def fdp_ragged_dw(x: jax.Array, g: jax.Array, group_sizes: jax.Array, *,
+                  num_groups: int, spec: AccumulatorSpec, fmt=FP32,
+                  plan: GemmPlan | None = None,
+                  interpret: bool | None = None) -> jax.Array:
+    """Sorted-segment grouped weight gradient: ``dW[e] = X_eᵀ · G_e`` for
+    ``x (T, d)`` / ``g (T, f)`` rows sorted by group -> ``(E, d, f)`` f32.
+
+    The contraction dim is the ragged token dim: one tile per (token-block,
+    group) intersection, routed to its group's output block — O(T·d·f) MACs.
+    Zero-size groups (including leading/trailing ones) get exact-zero
+    gradients. ``plan`` is fitted to the (d, f, T) problem, so ``plan.bk``
+    is the token-block size (carry-safe by ``GemmPlan.fit``).
+    """
+    T, d = x.shape
+    f = g.shape[1]
+    if group_sizes.shape != (num_groups,):
+        raise ValueError(f"group_sizes {group_sizes.shape} != ({num_groups},)")
+    p = resolve_plan(plan, None, None, None, d, f, T)
+    return _fdp_ragged_dw_jit(x, g, group_sizes, spec=spec, fmt=fmt,
+                              bm=p.bm, bn=p.bn, bk=p.bk, interpret=interpret)

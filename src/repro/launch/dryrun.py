@@ -468,6 +468,16 @@ def main(argv=None):
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args(argv)
 
+    # XLA_FLAGS merge is a no-op for flags already set (the module top pins
+    # the 512 host devices before jax import); schedules warm the plan cache
+    # so plan-lowered cells never autotune mid-sweep.
+    from repro.core.schedules import preload_schedules
+    from repro.launch.xla_flags import apply_xla_flags
+    apply_xla_flags()
+    n_sched = preload_schedules()
+    if n_sched:
+        print(f"[dryrun] schedule zoo: {n_sched} GEMM schedules preloaded")
+
     cells = []
     if args.all:
         for arch in all_arch_names():

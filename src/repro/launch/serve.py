@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import argparse
 import contextlib
+import os
 import time
 
 import jax
@@ -82,6 +83,14 @@ def main(argv=None):
                     help="slots x len bucket table for --engine routed, "
                          "e.g. 2x32,4x64 (default: one bucket sized to fit)")
     args = ap.parse_args(argv)
+
+    from repro.core.schedules import preload_schedules
+    from repro.launch.xla_flags import apply_xla_flags
+    apply_xla_flags()
+    n_sched = preload_schedules(os.path.join(args.plans, "schedules"))
+    if n_sched:
+        print(f"[serve] schedule zoo: {n_sched} GEMM schedules preloaded "
+              f"(warm plan cache, zero autotune misses)")
 
     cfg = get_config(args.arch)
     base_arch = cfg.name

@@ -49,6 +49,13 @@ def main(argv=None):
     ap.add_argument("--log", default=None)
     args = ap.parse_args(argv)
 
+    from repro.core.schedules import preload_schedules
+    from repro.launch.xla_flags import apply_xla_flags
+    apply_xla_flags()
+    n_sched = preload_schedules()
+    if n_sched:
+        print(f"[train] schedule zoo: {n_sched} GEMM schedules preloaded")
+
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()

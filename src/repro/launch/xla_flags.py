@@ -1,0 +1,72 @@
+"""Per-backend tuned XLA flag dictionaries, applied at launch.
+
+The serving-stack idiom (saxml's ``llm_xla_flags.py``): XLA tuning lives in
+named flag dictionaries, merged into ``XLA_FLAGS`` before the first JAX
+import touches the backend. Flags the user already set in the environment
+always win — a launch driver must never silently override an operator's
+hand-tuned value.
+
+These dictionaries complement the schedule zoo: the zoo removes autotune
+misses from *our* Pallas plan cache, the flags remove known-bad defaults
+from *XLA's* side of the same serving processes.
+"""
+
+from __future__ import annotations
+
+import os
+
+# Inference-lean TPU set: serving-shaped programs (small batch, latency
+# bound) want prefetch ordering enforced and the loop optimizer on; RWB
+# fusion and auto cross-replica sharding pessimize decode-step latency.
+TPU_SERVE_FLAGS = {
+    "xla_tpu_rwb_fusion": "false",
+    "xla_jf_auto_cross_replica_sharding": "false",
+    "xla_tpu_perform_spmd_cse_prevention": "true",
+    "xla_tpu_enforce_prefetch_fifo_order": "true",
+    "xla_tpu_memory_bound_loop_optimizer_options": "enabled:true",
+}
+
+# CPU (the interpret-mode development backend): pin fast-math OFF so the
+# bit-exactness claims the FDP tests make are never at the mercy of a
+# toolchain default flip. No layout/fusion tuning — interpret mode doesn't
+# reward it and surprises aren't worth it.
+CPU_FLAGS = {
+    "xla_cpu_enable_fast_math": "false",
+}
+
+BACKEND_FLAGS = {
+    "tpu": TPU_SERVE_FLAGS,
+    "cpu": CPU_FLAGS,
+}
+
+
+def xla_flag_tokens(backend: str) -> list:
+    """The ``--flag=value`` tokens for one backend ([] if untuned)."""
+    return [f"--{k}={v}" for k, v in
+            sorted(BACKEND_FLAGS.get(backend, {}).items())]
+
+
+def apply_xla_flags(backend: str | None = None) -> str:
+    """Merge the tuned flag dict for ``backend`` into ``XLA_FLAGS``.
+
+    Existing user-set tokens take precedence: a flag already present in the
+    environment (by name) is left exactly as the user wrote it. Must run
+    before the backend initializes to take effect — call it at the top of a
+    launch ``main()``, not after the first ``jax.device_put``. Returns the
+    resulting ``XLA_FLAGS`` string.
+    """
+    if backend is None:
+        # Cheap backend sniff without initializing jax: respect JAX_PLATFORMS
+        # when set, else assume the baked-in toolchain's CPU backend.
+        backend = (os.environ.get("JAX_PLATFORMS", "cpu")
+                   .split(",")[0].strip() or "cpu")
+    existing = os.environ.get("XLA_FLAGS", "").split()
+    have = {tok.lstrip("-").split("=", 1)[0] for tok in existing}
+    merged = list(existing)
+    for tok in xla_flag_tokens(backend):
+        if tok.lstrip("-").split("=", 1)[0] not in have:
+            merged.append(tok)
+    flags = " ".join(merged)
+    if flags:
+        os.environ["XLA_FLAGS"] = flags
+    return flags

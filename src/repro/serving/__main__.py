@@ -70,6 +70,11 @@ def main(argv=None):
                     help="exit 1 unless every request completed (CI gate)")
     args = ap.parse_args(argv)
 
+    import os
+
+    from repro.core.schedules import preload_schedules
+    n_sched = preload_schedules(os.path.join(args.plans, "schedules"))
+
     cfg = get_config(args.arch)
     # plans are recorded per base arch; the reduced config only shrinks shapes
     router = PlanRouter.from_manifest(args.plans, arch=cfg.name)
@@ -102,6 +107,10 @@ def main(argv=None):
     print(f"  pool: {pool_st['compiles']} compiles, {pool_st['hits']} hits, "
           f"{pool_st['evictions']} evictions, resident={pool_st['resident']},"
           f" bucket_hits={pool_st['bucket_hits']}")
+    ps = pool_st["plans"]
+    print(f"  plans: {n_sched} preloaded from zoo; cache size={ps['size']} "
+          f"hits={ps['hits']} misses={ps['misses']} "
+          f"autotuned={ps['autotuned']} persisted={ps['persisted_loads']}")
     if streamed:
         print(f"  streamed uid=1: {streamed}")
 

@@ -244,8 +244,13 @@ class BucketedEnginePool:
         return dict(self._engines)
 
     def stats(self) -> dict:
+        from repro.core.dispatch import plan_cache_stats
         total = sum(self._bucket_hits.values())
         return {**self._stats, "resident": len(self._engines),
                 "bucket_hits": dict(self._bucket_hits),
                 "bucket_hit_rate": (self._stats["hits"] / total
-                                    if total else 0.0)}
+                                    if total else 0.0),
+                # GemmPlan cache counters (process-global): the serving-tier
+                # health signal for the schedule zoo — warm pools show
+                # misses == 0, persisted_loads > 0
+                "plans": plan_cache_stats().as_dict()}

@@ -11,7 +11,7 @@ import pytest
 from repro.core import AccumulatorSpec, FP32, POSIT16_1
 from repro.core import fdp
 from repro.core.dispatch import (GemmConfig, GemmPlan, NumericsPolicy, gemm,
-                                 plan_cache_info, plan_gemm, use_policy)
+                                 plan_cache_stats, plan_gemm, use_policy)
 from repro.kernels import ops as kops
 
 SPEC = AccumulatorSpec.paper_91bit()
@@ -43,9 +43,9 @@ def test_batched_kernel_equals_vmapped_2d(rng):
     """The native 4-D grid == vmap of the 2-D kernel, bit for bit."""
     A = jnp.asarray(rng.standard_normal((3, 24, 96)), jnp.float32)
     B = jnp.asarray(rng.standard_normal((3, 96, 16)), jnp.float32)
-    got = kops.fdp_gemm_batched(A, B, spec=SPEC, bm=8, bn=8, bk=32)
+    got = kops.fdp_gemm_batched(A, B, spec=SPEC, plan=GemmPlan(8, 8, 32))
     ref = jax.vmap(lambda x, y: kops.fdp_gemm(x, y, spec=SPEC,
-                                              bm=8, bn=8, bk=32))(A, B)
+                                              plan=GemmPlan(8, 8, 32)))(A, B)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
 
 
@@ -126,12 +126,12 @@ def test_autotune_upgrades_heuristic_cache_entry():
 
 
 def test_plan_cache_hits_and_override(rng):
-    info0 = plan_cache_info()
+    st0 = plan_cache_stats()
     p1 = plan_gemm(64, 64, 256, fmt=FP32, spec=SPEC)
     p2 = plan_gemm(64, 64, 256, fmt=FP32, spec=SPEC)
     assert p1 == p2
-    info1 = plan_cache_info()
-    assert info1["hits"] >= info0["hits"] + 1
+    st1 = plan_cache_stats()
+    assert st1.hits >= st0.hits + 1
     # an explicit plan override is honored end-to-end
     A = jnp.asarray(rng.standard_normal((9, 33)), jnp.float32)
     B = jnp.asarray(rng.standard_normal((33, 7)), jnp.float32)

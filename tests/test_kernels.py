@@ -5,7 +5,7 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core import AccumulatorSpec, BF16, FP32, POSIT16_1
+from repro.core import AccumulatorSpec, BF16, FP32, GemmPlan, POSIT16_1
 from repro.kernels.ops import fdp_gemm as pallas_gemm
 from repro.kernels.ref import fdp_gemm_ref
 
@@ -29,7 +29,7 @@ def test_kernel_bitexact_f32(spec, shape, rng):
     A = (rng.standard_normal((M, K)) * 3).astype(np.float32)
     B = (rng.standard_normal((K, N)) * 3).astype(np.float32)
     got = np.asarray(pallas_gemm(jnp.asarray(A), jnp.asarray(B), spec=spec,
-                                 bm=8, bn=8, bk=32))
+                                 plan=GemmPlan(8, 8, 32)))
     ref = np.asarray(fdp_gemm_ref(jnp.asarray(A), jnp.asarray(B), spec=spec))
     np.testing.assert_array_equal(got, ref)
 
@@ -42,7 +42,7 @@ def test_kernel_block_size_invariance(blocks, rng):
     B = rng.standard_normal((K, N)).astype(np.float32)
     bm, bn, bk = blocks
     got = np.asarray(pallas_gemm(jnp.asarray(A), jnp.asarray(B), spec=spec,
-                                 bm=bm, bn=bn, bk=bk))
+                                 plan=GemmPlan(bm, bn, bk)))
     ref = np.asarray(fdp_gemm_ref(jnp.asarray(A), jnp.asarray(B), spec=spec))
     np.testing.assert_array_equal(got, ref)
 
@@ -51,7 +51,7 @@ def test_kernel_bf16_inputs(rng):
     spec = AccumulatorSpec(ovf=9, msb=6, lsb=-20)
     A = jnp.asarray(rng.standard_normal((16, 48)), jnp.bfloat16)
     B = jnp.asarray(rng.standard_normal((48, 8)), jnp.bfloat16)
-    got = np.asarray(pallas_gemm(A, B, spec=spec, fmt=BF16, bm=8, bn=8, bk=16))
+    got = np.asarray(pallas_gemm(A, B, spec=spec, fmt=BF16, plan=GemmPlan(8, 8, 16)))
     ref = np.asarray(fdp_gemm_ref(A, B, spec=spec, fmt=BF16))
     np.testing.assert_array_equal(got, ref)
 
@@ -64,7 +64,7 @@ def test_kernel_posit_inputs(rng):
     ap = POSIT16_1.from_float(jnp.asarray(av))
     bp = POSIT16_1.from_float(jnp.asarray(bv))
     got = np.asarray(pallas_gemm(ap, bp, spec=spec, fmt=POSIT16_1,
-                                 bm=8, bn=8, bk=8))
+                                 plan=GemmPlan(8, 8, 8)))
     ref = np.asarray(fdp_gemm_ref(ap, bp, spec=spec, fmt=POSIT16_1))
     np.testing.assert_array_equal(got, ref)
     # and the values are close to the f32 product of the posit-rounded inputs
@@ -87,7 +87,7 @@ def test_kernel_exactness_vs_f64(rng):
     A = rng.standard_normal((16, 512)).astype(np.float32)
     B = rng.standard_normal((512, 16)).astype(np.float32)
     got = np.asarray(pallas_gemm(jnp.asarray(A), jnp.asarray(B), spec=spec,
-                                 bm=8, bn=8, bk=256))
+                                 plan=GemmPlan(8, 8, 256)))
     ref64 = A.astype(np.float64) @ B.astype(np.float64)
     # per-product RTZ at 2^-30 bounds |err| by K * 2^-30 absolutely; small
     # outputs (random cancellation) need that floor on top of rtol.

@@ -1,0 +1,299 @@
+"""Sorted-segment FDP MoE kernel + the persisted schedule zoo.
+
+The kernel claims: walking contiguous per-expert segments with a scalar-
+prefetched weight index map does O(T·d·f) MACs (not the reference path's
+T×E) while staying **bit-identical** — exact ⟨ovf,msb,lsb⟩ limb accumulation
+is order-invariant, so any blocking/segmentation of the same products reads
+out the same float. The zoo claims: schedules persist with fingerprint +
+schema versioning and a warm process takes zero autotune misses.
+"""
+
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import AccumulatorSpec, BF16, FP32
+from repro.core.dispatch import (GemmConfig, GemmPlan, NumericsPolicy,
+                                 clear_plan_cache, plan_cache_info,
+                                 plan_cache_stats, plan_gemm, ragged_gemm,
+                                 use_policy)
+from repro.core.schedules import (SCHEDULE_KIND, ScheduleZoo,
+                                  preload_schedules, schedule_fingerprint)
+from repro.kernels import ops as kops
+
+SPEC = AccumulatorSpec.paper_91bit()
+
+
+def _policy(mode, fmt=FP32):
+    return NumericsPolicy(GemmConfig(fmt, SPEC, mode), name=f"t_{mode}")
+
+
+def _bits(x):
+    return np.asarray(x).view(np.uint32)
+
+
+def _run(mode, x, w, gs, fmt=FP32):
+    with use_policy(_policy(mode, fmt)):
+        return ragged_gemm(x, w, gs, site="t_seg")
+
+
+# ---------------------------------------------------------------------------
+# bit-equality vs the reference grouped path
+# ---------------------------------------------------------------------------
+# (T, d, f, group_sizes) — sum(gs) < T means padded trailing rows
+SEGMENT_CASES = [
+    pytest.param(96, 16, 24, [0, 0, 50, 0, 30, 16, 0], id="zeros_everywhere"),
+    pytest.param(40, 16, 8, [12, 9, 11], id="padded_rows"),
+    pytest.param(24, 300, 8, [24], id="one_expert_multi_kblock"),
+    pytest.param(33, 7, 9, [10, 0, 23], id="odd_dims"),
+    pytest.param(16, 8, 8, [0, 0, 0, 0], id="all_empty"),
+    pytest.param(48, 16, 16, [16, 16, 16], id="even"),
+]
+
+
+@pytest.mark.parametrize("T,d,f,gs", SEGMENT_CASES)
+def test_sorted_segment_forward_bit_identical(rng, T, d, f, gs):
+    x = jnp.asarray(rng.standard_normal((T, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((len(gs), d, f)), jnp.float32)
+    gs = jnp.asarray(gs, jnp.int32)
+    got = _run("pallas", x, w, gs)
+    ref = _run("simulate", x, w, gs)
+    np.testing.assert_array_equal(_bits(got), _bits(ref))
+
+
+def test_sorted_segment_bf16_bit_identical(rng):
+    T, d, f = 32, 24, 16
+    x = jnp.asarray(rng.standard_normal((T, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, d, f)), jnp.float32)
+    gs = jnp.asarray([20, 0, 12], jnp.int32)
+    got = _run("pallas", x, w, gs, fmt=BF16)
+    ref = _run("simulate", x, w, gs, fmt=BF16)
+    np.testing.assert_array_equal(_bits(got), _bits(ref))
+
+
+def test_sorted_segment_grads_bit_identical(rng):
+    """dA (ragged contraction vs transposed weights) and dB (per-expert
+    wgrad) through the sorted-segment kernels match the reference-path
+    gradients bit for bit — fwd outputs agree exactly, so both modes see
+    the same cotangent and order-invariant limb accumulation does the rest."""
+    T, d, f = 40, 12, 10
+    x = jnp.asarray(rng.standard_normal((T, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((4, d, f)), jnp.float32)
+    gs = jnp.asarray([11, 0, 20, 5], jnp.int32)   # 4 padded rows
+
+    def loss(mode):
+        def fn(x, w):
+            with use_policy(_policy(mode)):
+                return (ragged_gemm(x, w, gs, site="t_seg_grad") ** 2).sum()
+        return fn
+
+    gp = jax.grad(loss("pallas"), argnums=(0, 1))(x, w)
+    gr = jax.grad(loss("simulate"), argnums=(0, 1))(x, w)
+    np.testing.assert_array_equal(_bits(gp[0]), _bits(gr[0]))
+    np.testing.assert_array_equal(_bits(gp[1]), _bits(gr[1]))
+
+
+def test_sorted_segment_under_jit_traced_group_sizes(rng):
+    """group_sizes is data, not a static shape: the meta table builds from
+    traced values inside jit (scalar prefetch), so routing can change
+    between calls without recompiling."""
+    T, d, f = 32, 8, 8
+    x = jnp.asarray(rng.standard_normal((T, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, d, f)), jnp.float32)
+
+    @jax.jit
+    def run(gs):
+        with use_policy(_policy("pallas")):
+            return ragged_gemm(x, w, gs, site="t_seg_jit")
+
+    for sizes in ([16, 8, 8], [0, 32, 0], [10, 0, 22]):
+        gs = jnp.asarray(sizes, jnp.int32)
+        np.testing.assert_array_equal(
+            _bits(run(gs)), _bits(_run("simulate", x, w, gs)))
+
+
+def test_kernel_level_ops_entry_points(rng):
+    """kernels.ops.fdp_ragged_gemm / fdp_ragged_dw against hand-built
+    grouped references, with an explicit GemmPlan."""
+    T, d, f, E = 24, 16, 8, 3
+    gs_np = np.array([10, 0, 14])
+    x = jnp.asarray(rng.standard_normal((T, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((E, d, f)), jnp.float32)
+    g = jnp.asarray(rng.standard_normal((T, f)), jnp.float32)
+    gs = jnp.asarray(gs_np, jnp.int32)
+    plan = GemmPlan(8, 8, 16)
+    seg = np.repeat(np.arange(E), gs_np)
+
+    out = kops.fdp_ragged_gemm(x, w, gs, spec=SPEC, plan=plan)
+    ref = jnp.stack([kops.fdp_gemm(x, w[e], spec=SPEC, plan=plan)
+                     for e in range(E)])[seg, np.arange(T)]
+    np.testing.assert_array_equal(_bits(out), _bits(ref))
+
+    dw = kops.fdp_ragged_dw(x, g, gs, num_groups=E, spec=SPEC, plan=plan)
+    masks = seg[None, :] == np.arange(E)[:, None]
+    dw_ref = jnp.stack([
+        kops.fdp_gemm(jnp.where(jnp.asarray(m)[:, None], x, 0.0).T, g,
+                      spec=SPEC, plan=plan) for m in masks])
+    np.testing.assert_array_equal(_bits(dw), _bits(dw_ref))
+
+
+# ---------------------------------------------------------------------------
+# MAC scaling: O(T), not O(T·E)
+# ---------------------------------------------------------------------------
+def _pallas_grids(jaxpr):
+    grids = []
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            gm = eqn.params.get("grid_mapping")
+            grids.append(tuple(gm.grid) if gm is not None
+                         else tuple(eqn.params["grid"]))
+        for p in eqn.params.values():
+            sub = getattr(p, "jaxpr", None)
+            if sub is not None and hasattr(sub, "eqns"):
+                grids += _pallas_grids(sub)
+    return grids
+
+
+def test_segment_kernel_mac_count_is_linear_in_tokens(rng):
+    """The telescoping tile bound: the jaxpr's pallas grid × block volume is
+    f·d·(T + (E−1)·bm) — linear in T — while the reference grouped path
+    costs E·T·d·f. Asserted on the lowered jaxpr, not on wall time."""
+    T, d, f, E, bm = 64, 32, 32, 4, 8
+    x = jnp.asarray(rng.standard_normal((T, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((E, d, f)), jnp.float32)
+    gs = jnp.asarray([16, 16, 16, 16], jnp.int32)
+    plan = GemmPlan(bm, f, d)
+
+    jaxpr = jax.make_jaxpr(
+        lambda x, w, gs: kops.fdp_ragged_gemm(x, w, gs, spec=SPEC,
+                                              plan=plan))(x, w, gs)
+    grids = _pallas_grids(jaxpr.jaxpr)
+    assert len(grids) == 1, f"expected one pallas_call, saw grids {grids}"
+    grid = grids[0]
+    macs = int(np.prod(grid)) * bm * f * d
+    bound = f * d * (T + (E - 1) * bm)
+    reference_macs = E * T * d * f
+    assert macs == bound, (grid, macs, bound)
+    assert macs < reference_macs / 2
+
+
+# ---------------------------------------------------------------------------
+# schedule zoo: persistence, rejection, warm-load zero-miss
+# ---------------------------------------------------------------------------
+def _tuned_cache():
+    clear_plan_cache()
+    plans = {(64, 48, 80): plan_gemm(64, 48, 80, fmt=FP32, spec=SPEC),
+             (32, 32, 32): plan_gemm(32, 32, 32, fmt=BF16, spec=SPEC)}
+    return plans
+
+
+def test_schedule_zoo_round_trip(tmp_path):
+    plans = _tuned_cache()
+    zoo = ScheduleZoo.from_cache(meta={"note": "test"})
+    path = tmp_path / f"{zoo.backend}.json"
+    zoo.save(path)
+
+    doc = json.loads(path.read_text())
+    assert doc["kind"] == SCHEDULE_KIND
+    assert doc["fingerprint"] == schedule_fingerprint()
+
+    loaded = ScheduleZoo.load(path)
+    assert loaded.backend == zoo.backend
+    assert loaded.meta["note"] == "test"
+    assert {k[1:4] for k in loaded.entries} == {(64, 48, 80), (32, 32, 32)}
+    for key, plan in loaded.entries.items():
+        assert plan.tile == zoo.entries[key].tile
+    clear_plan_cache()
+
+
+@pytest.mark.parametrize("field,value,msg", [
+    ("kind", "bogus", "not a schedule zoo"),
+    ("version", 99, "schema version"),
+    ("fingerprint", "deadbeef", "fingerprint"),
+])
+def test_schedule_zoo_rejects(tmp_path, field, value, msg):
+    _tuned_cache()
+    zoo = ScheduleZoo.from_cache()
+    path = tmp_path / "zoo.json"
+    zoo.save(path)
+    doc = json.loads(path.read_text())
+    doc[field] = value
+    path.write_text(json.dumps(doc))
+    with pytest.raises(ValueError, match=msg):
+        ScheduleZoo.load(path)
+    if field == "fingerprint":     # explicit bypass for offline inspection
+        assert ScheduleZoo.load(path, check_fingerprint=False).entries
+    clear_plan_cache()
+
+
+def test_warm_process_takes_zero_autotune_misses(tmp_path):
+    """The zoo's acceptance property: save → cold process (cleared cache) →
+    preload → the same plan lookups all hit, misses stays 0."""
+    plans = _tuned_cache()
+    ScheduleZoo.from_cache().save(tmp_path / "cpu.json")
+
+    clear_plan_cache()                       # "process restart"
+    n = preload_schedules(str(tmp_path))
+    assert n == 2
+    p1 = plan_gemm(64, 48, 80, fmt=FP32, spec=SPEC)
+    p2 = plan_gemm(32, 32, 32, fmt=BF16, spec=SPEC)
+    assert p1.tile == plans[(64, 48, 80)].tile
+    assert p2.tile == plans[(32, 32, 32)].tile
+    assert p1.source == "persisted" and p2.source == "persisted"
+    st = plan_cache_stats()
+    assert st.misses == 0 and st.hits == 2 and st.persisted_loads == 2
+    clear_plan_cache()
+
+
+def test_preload_missing_zoo_is_zero(tmp_path):
+    assert preload_schedules(str(tmp_path / "nowhere")) == 0
+
+
+def test_checked_in_schedule_zoo_loads():
+    """The committed cpu.json must always load against the current autotune
+    config — a fingerprint drift here means refresh_plans --schedules was
+    skipped after changing the candidate set."""
+    import os
+    path = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "examples", "plans", "schedules", "cpu.json")
+    zoo = ScheduleZoo.load(path)
+    assert zoo.backend == "cpu" and zoo.entries
+
+
+# ---------------------------------------------------------------------------
+# GemmPlan-first API: deprecation shims
+# ---------------------------------------------------------------------------
+def test_loose_tile_ints_deprecated_but_equal(rng):
+    a = jnp.asarray(rng.standard_normal((16, 24)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((24, 8)), jnp.float32)
+    want = kops.fdp_gemm(a, b, spec=SPEC, plan=GemmPlan(8, 8, 16))
+    with pytest.warns(DeprecationWarning):
+        got = kops.fdp_gemm(a, b, spec=SPEC, bm=8, bn=8, bk=16)
+    np.testing.assert_array_equal(_bits(got), _bits(want))
+
+
+def test_mixing_plan_and_ints_raises(rng):
+    a = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+    with pytest.raises(TypeError):
+        kops.fdp_gemm(a, b, spec=SPEC, plan=GemmPlan(8, 8, 8), bm=8)
+
+
+def test_plan_cache_info_shim_warns():
+    with pytest.warns(DeprecationWarning):
+        info = plan_cache_info()
+    assert set(info) == {"size", "hits", "misses", "autotuned",
+                         "persisted_loads"}
+    assert info == plan_cache_stats().as_dict()
+
+
+def test_gemm_plan_fit_clamps():
+    p = GemmPlan(128, 128, 1 << 20)
+    q = p.fit(9, 7, 33)
+    assert q.tile == (16, 8, 40)
+    assert p.fit(256, 256, 4096) == GemmPlan(128, 128, 4096)
