@@ -1,0 +1,162 @@
+#!/usr/bin/env python
+"""Quantized optimizer-state bench: step time, bytes resident, bytes moved.
+
+Times the Adam update (dequant -> update -> requant when state is
+quantized) over a model-shaped parameter tree, fp32 state vs block-scaled
+``q8b64`` carriers, plus the gradient all-reduce payload through
+``quantized_psum`` vs the plain float psum. The fp32 rows carry
+``impl="native"`` — plain XLA arithmetic this repo's quantization code
+cannot slow down — so the regression gate calibrates cross-machine speed on
+them, same as ``bench_gemm``/``bench_serving``.
+
+Alongside the gated throughput rows (``metric="steps_per_s"``), metric-less
+info rows record the byte evidence: optimizer bytes resident and psum
+payload bytes, each with its ratio vs fp32 (the committed baseline pins
+both at ~0.25x, and the bench asserts <= 0.5x).
+
+    PYTHONPATH=src python benchmarks/bench_opt_state.py --quick --json out.json
+    python scripts/check_bench_regression.py --baseline BENCH_opt.json \
+        --new out.json
+"""
+
+import argparse
+import json
+import platform
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.qformat import QuantConfig, quant_bytes
+from repro.models import init
+from repro.train.optimizer import (adamw, apply_updates,
+                                   optimizer_state_bytes)
+
+Q8 = QuantConfig(8, 64)
+
+
+def build_tree(arch: str, copies: int):
+    """A model-shaped parameter tree, replicated ``copies`` times so the
+    update stays above the gate's noise floor on fast runners (the reduced
+    configs are ~115k params; the quantize/dequant cost scales linearly)."""
+    cfg = get_config(arch).reduced()
+    base = init(cfg, jax.random.key(0))
+    return {f"rep{i}": base for i in range(copies)}
+
+
+def time_call(fn, *args, reps: int):
+    out = jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps, out
+
+
+def bench_opt_step(arch, params, grads, squant, reps):
+    opt = adamw(1e-3, state_quant=squant)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(p, s, g):
+        u, s = opt.update(g, s, p)
+        return apply_updates(p, u), s
+
+    sec, (_, state) = time_call(step, params, state, grads, reps=reps)
+    tag = "q8b64" if squant else "fp32"
+    n = sum(x.size for x in jax.tree.leaves(params))
+    return {"name": f"opt_step_{tag}_state_{arch}",
+            "impl": "native" if squant is None else "quantized",
+            "seconds_per_call": sec, "steps_per_s": 1.0 / sec,
+            "state_bytes": optimizer_state_bytes(state),
+            "derived": f"adam update over {n} params, {tag} moments"}
+
+
+def bench_psum(n, cfg, reps):
+    """Gradient-mean all-reduce payload path on a 1-device mesh (the wire
+    format's quantize/reduce/dequantize cost; payload bytes are modeled by
+    ``quant_bytes``, identical at any device count)."""
+    from jax.sharding import Mesh, PartitionSpec as P
+    import jax.experimental.shard_map as shard_map
+    from repro.parallel.collectives import quantized_psum
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("dp",))
+    x = jax.random.normal(jax.random.key(1), (n,)) * 0.1
+    f = jax.jit(shard_map.shard_map(
+        lambda v: quantized_psum(v, "dp", cfg, mean=True), mesh=mesh,
+        in_specs=(P(),), out_specs=P()))
+    sec, _ = time_call(f, x, reps=reps)
+    tag = cfg.tag()
+    return {"name": f"grad_psum_{tag}_{n}",
+            "impl": "native" if cfg.mode == "fp32" else "quantized",
+            "seconds_per_call": sec, "steps_per_s": 1.0 / sec,
+            "payload_bytes": quant_bytes(n, cfg),
+            "derived": f"{tag} gradient-mean psum over {n} elements"}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-mlp")
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer reps/copies for bounded CI lanes")
+    ap.add_argument("--copies", type=int, default=None)
+    ap.add_argument("--psum-elements", type=int, default=None)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    copies = args.copies or (4 if args.quick else 8)
+    n_psum = args.psum_elements or (1 << 20)
+    reps = 3 if args.quick else 10
+    t0 = time.perf_counter()
+
+    params = build_tree(args.arch, copies)
+    grads = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.key(2), p.shape) * 0.01,
+        params)
+    squant = {"mu": Q8, "nu": Q8}
+    rows = [
+        bench_opt_step(args.arch, params, grads, None, reps),
+        bench_opt_step(args.arch, params, grads, squant, reps),
+        bench_psum(n_psum, QuantConfig(mode="fp32"), reps),
+        bench_psum(n_psum, Q8, reps),
+    ]
+    # metric-less info rows: the byte evidence (ignored by the gate's
+    # throughput matching, recorded in the committed baseline)
+    by = {r["name"]: r for r in rows}
+    fp_res = by[f"opt_step_fp32_state_{args.arch}"]["state_bytes"]
+    q_res = by[f"opt_step_q8b64_state_{args.arch}"]["state_bytes"]
+    fp_wire = by[f"grad_psum_fp32_{n_psum}"]["payload_bytes"]
+    q_wire = by[f"grad_psum_q8b64_{n_psum}"]["payload_bytes"]
+    rows += [
+        {"name": f"opt_state_bytes_resident_{args.arch}", "impl": "info",
+         "fp32_bytes": fp_res, "q8b64_bytes": q_res,
+         "ratio_vs_fp32": q_res / fp_res,
+         "derived": "Adam moment carrier bytes, quantized vs fp32"},
+        {"name": f"grad_psum_payload_bytes_{n_psum}", "impl": "info",
+         "fp32_bytes": fp_wire, "q8b64_bytes": q_wire,
+         "ratio_vs_fp32": q_wire / fp_wire,
+         "derived": "all-reduce payload bytes per device, q8b64 vs fp32"},
+    ]
+    assert q_res <= 0.5 * fp_res, "resident bytes not halved"
+    assert q_wire <= 0.5 * fp_wire, "payload bytes not halved"
+
+    for r in rows:
+        us = r.get("seconds_per_call", 0.0) * 1e6
+        extra = (f"{r['steps_per_s']:.1f} steps/s" if "steps_per_s" in r
+                 else f"ratio {r['ratio_vs_fp32']:.3f}x")
+        print(f"{r['name']:44s} {us:10.1f} us  {extra}")
+
+    if args.json:
+        doc = {"bench": "bench_opt_state", "metric": "steps_per_s",
+               "arch": f"{args.arch}-reduced", "quick": args.quick,
+               "backend": jax.default_backend(),
+               "platform": platform.platform(),
+               "wall_seconds": time.perf_counter() - t0, "rows": rows}
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,10 +21,10 @@ For every ``examples/plans/*.json`` (except MANIFEST.json) this
      under the plan's numerics, so a plan whose formats/accumulators no
      longer load, dispatch, or produce tokens fails the lane.
 
-It also asserts the v1 -> v2 loader migration on the checked-in v1 fixture
-(``examples/plans/fixtures/paper_mlp.v1.json``): plain-name assignments stay
-forward-only, the synthesized widened ``bwd_default`` round-trips, and saving
-the migrated plan re-loads identically.
+It also asserts the v1 -> current loader migration on the checked-in v1
+fixture (``examples/plans/fixtures/paper_mlp.v1.json``): plain-name
+assignments stay forward-only, the synthesized widened ``bwd_default``
+round-trips, and saving the migrated plan re-loads identically.
 
     PYTHONPATH=src python scripts/check_plan_zoo.py
     PYTHONPATH=src python scripts/check_plan_zoo.py --no-serve   # fast half
@@ -55,10 +55,19 @@ def check_plan(path: str, manifest: dict, serve: bool = True) -> list:
     if not plan.sites:
         errors.append("plan has no sites")
 
-    # 0. every site key must be a well-formed (possibly phase-qualified)
-    # GemmSite string — a typo'd phase/operand must fail the lane, not get
-    # silently treated as an unmatched pattern at serve time
+    # 0. every site key must be well-formed for its kind — gemm keys parse
+    # as (possibly phase-qualified) GemmSites; aux (@state/@coll) keys carry
+    # their kind in the document and it must agree with the key's grammar.
+    # A typo'd phase/operand/suffix must fail the lane, not get silently
+    # treated as an unmatched pattern at serve time
+    from repro.core.qformat import site_kind
     for s in plan.sites:
+        if s.kind != "gemm":
+            if site_kind(s.site) != s.kind:
+                errors.append(f"aux site {s.site!r}: key grammar says "
+                              f"{site_kind(s.site)!r}, document says "
+                              f"{s.kind!r}")
+            continue
         try:
             site = GemmSite.parse(s.site)
         except ValueError as e:
@@ -68,9 +77,17 @@ def check_plan(path: str, manifest: dict, serve: bool = True) -> list:
             errors.append(f"site key {s.site!r} is not canonical "
                           f"(expected {site.key!r})")
 
-    # 1. policy round-trip through the deployment entry point
+    # 1. policy round-trip through the deployment entry point (aux sites
+    # deploy through NumericsPolicy.aux, gemm sites through overrides)
     policy = policy_from_plan(path)
     for s in plan.sites:
+        if s.kind != "gemm":
+            aux = policy.aux_lookup(s.site)
+            if aux is None or aux.tag() != s.cfg.tag():
+                errors.append(f"aux site {s.site}: policy aux_lookup "
+                              f"{aux and aux.tag()!r} != plan "
+                              f"{s.cfg.tag()!r}")
+            continue
         got = policy.lookup(s.site).tag()
         if got != s.cfg.tag():
             errors.append(f"site {s.site}: policy lookup {got!r} != plan "
@@ -134,6 +151,18 @@ def check_plan(path: str, manifest: dict, serve: bool = True) -> list:
         if entry.get("validation") != validation_summary(plan.meta):
             errors.append("MANIFEST validation scores out of sync "
                           "with plan meta")
+        # provenance (backend + device topology the plan was searched on):
+        # absent = single-device, the historical default — tolerated for
+        # every pre-provenance entry. Present, it must be a record with a
+        # backend name and a positive device count, in sync with the plan.
+        prov = entry.get("provenance")
+        if prov is not None:
+            if (not isinstance(prov, dict) or not prov.get("backend")
+                    or not isinstance(prov.get("devices"), int)
+                    or prov["devices"] < 1):
+                errors.append(f"MANIFEST provenance malformed: {prov!r}")
+            if prov != plan.meta.get("provenance"):
+                errors.append("MANIFEST provenance out of sync with plan")
 
         # 3b. routing metadata: the serving tier's PlanRouter ranks plans by
         # the MANIFEST's recorded evidence — every entry must carry numeric
@@ -164,7 +193,8 @@ def check_plan(path: str, manifest: dict, serve: bool = True) -> list:
 
 
 def check_v1_migration(fixture_path: str) -> list:
-    """The v1 -> v2 loader migration, asserted on a frozen v1 document."""
+    """The v1 -> current loader migration, asserted on a frozen v1
+    document."""
     import json as _json
 
     from repro.numerics import PLAN_VERSION, PrecisionPlan, load_plan
@@ -196,7 +226,8 @@ def check_v1_migration(fixture_path: str) -> list:
             errors.append(f"fwd lookup changed for {s.site}")
         if pol.lookup(f"{s.site}@bwd.dB").tag() != want_bwd.tag():
             errors.append(f"{s.site}@bwd.dB inherited the fwd assignment")
-    # save -> load round-trip of the migrated plan is stable (writes v2)
+    # save -> load round-trip of the migrated plan is stable (writes the
+    # current schema version)
     reloaded = PrecisionPlan.from_json(plan.to_json())
     if {s.site: s.cfg.tag() for s in reloaded.sites} != \
             {s.site: s.cfg.tag() for s in plan.sites}:
@@ -236,6 +267,14 @@ def check_schedules(schedules_dir: str) -> list:
                           f"the filename")
         if not zoo.entries:
             errors.append(f"{name}: empty schedule zoo")
+        # provenance: absent = single-device (pre-provenance files stay
+        # valid); present, it must name a backend and a device count
+        prov = zoo.meta.get("provenance")
+        if prov is not None and (
+                not isinstance(prov, dict) or not prov.get("backend")
+                or not isinstance(prov.get("devices"), int)
+                or prov["devices"] < 1):
+            errors.append(f"{name}: malformed provenance {prov!r}")
         for (batch, m, n, k, fmt_name, spec), plan in zoo.entries.items():
             try:
                 get_format(fmt_name)
@@ -314,11 +353,11 @@ def main(argv=None):
     errors = check_v1_migration(fixture)
     if errors:
         failures += 1
-        print("[plan-zoo] v1->v2 migration: FAIL")
+        print("[plan-zoo] v1 migration: FAIL")
         for e in errors:
             print(f"    - {e}")
     else:
-        print("[plan-zoo] v1->v2 migration: OK "
+        print("[plan-zoo] v1 migration: OK "
               "(fwd-only assignments, widened bwd fallback, round-trip)")
 
     if failures:

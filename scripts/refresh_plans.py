@@ -114,13 +114,24 @@ def refresh_schedules(args) -> None:
         backend, meta={"generated_by": "scripts/refresh_plans.py",
                        "shapes": [list(s) for s in SCHEDULE_SHAPES],
                        "fmts": list(SCHEDULE_FMTS),
-                       "spec": "paper_91bit"})
+                       "spec": "paper_91bit",
+                       "provenance": _provenance()})
     path = zoo_path(os.path.join(args.out, "schedules"), backend)
     zoo.save(path)
     st = plan_cache_stats()
     print(f"[schedules] {len(zoo.entries)} schedules "
           f"({st.autotuned} autotuned) -> {path} "
           f"({time.time() - t0:.0f}s)")
+
+
+def _provenance() -> dict:
+    """Where this artifact was measured/searched: backend + device topology.
+    Consumers (check_plan_zoo.py) treat an absent record as the historical
+    single-device default, so pre-provenance artifacts stay valid."""
+    import jax
+    return {"backend": jax.default_backend(),
+            "devices": jax.device_count(),
+            "process_count": jax.process_count()}
 
 
 def _alias_of(arch_id: str) -> str:
@@ -153,6 +164,45 @@ def _calibration_batch(cfg, *, with_targets: bool = False):
     from repro.workloads import make_probe_batch
     return make_probe_batch(cfg, batch_size=CAL_BATCH, seq=CAL_SEQ,
                             seed=CAL_SEED + 1, with_targets=with_targets)
+
+
+def _profile_aux_sites(trace, cfg, params, *, steps: int = 3,
+                       lr: float = 3e-3) -> None:
+    """Profile the non-GEMM precision sites — optimizer-moment value streams
+    (``opt.m@state`` / ``opt.v@state``) and the gradient-collective payload
+    (``grad_psum@coll``) — with a short fp32 Adam run, so the search can
+    enumerate block-scaled formats against the magnitudes the sites really
+    carry. Runs *outside* the calibration hook (the GEMM profiles' call/mac
+    counts must not double-count these extra steps) and only on fresh
+    calibrations: the aux profiles persist inside the saved trace, keeping
+    ``--check`` reruns deterministic, and pre-aux saved traces simply search
+    no aux sites."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import qformat
+    from repro.core.dispatch import MXU_FP32, use_policy
+    from repro.models import LOCAL
+    from repro.train.loop import make_loss_fn
+    from repro.train.optimizer import adamw, apply_updates
+
+    loss_fn = make_loss_fn(cfg, LOCAL, remat="none")
+    grad_batch = _calibration_batch(cfg, with_targets=True)
+    opt = adamw(lr)
+    with use_policy(MXU_FP32):
+        p, ostate = params, opt.init(params)
+        grads = None
+        for _ in range(steps):
+            (_, _aux), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(p, grad_batch)
+            trace.record_aux(qformat.GRAD_PSUM_SITE, grads)
+            updates, ostate = opt.update(grads, ostate, p)
+            p = apply_updates(p, updates)
+        trace.record_aux(qformat.OPT_M_SITE, ostate["mu"])
+        # nu is *stored* in sqrt domain (train.optimizer's second-moment
+        # safety contract), so the profiled stream is sqrt(nu)
+        trace.record_aux(qformat.OPT_V_SITE,
+                         jax.tree.map(jnp.sqrt, ostate["nu"]))
 
 
 class CheckDrift(Exception):
@@ -266,6 +316,8 @@ def refresh_arch(arch_id: str, args) -> dict:
                 grad_batch = _calibration_batch(cfg, with_targets=True)
                 jax.block_until_ready(jax.value_and_grad(
                     loss_fn, has_aux=True)(params, grad_batch))
+        if "bwd" in phases:
+            _profile_aux_sites(trace, cfg, params)
         trace.save(trace_path, fingerprint=fp,
                    meta={"arch": arch_id, "arch_alias": _alias_of(arch_id),
                          "config_name": cfg.name, "family": cfg.family,
@@ -273,7 +325,8 @@ def refresh_arch(arch_id: str, args) -> dict:
                          "batch": CAL_BATCH, "seq": CAL_SEQ})
         n_bwd = len(trace.sites("bwd"))
         print(f"[{arch_id}] trace saved to {trace_path} "
-              f"({len(trace.sites('fwd'))} fwd / {n_bwd} bwd sites)")
+              f"({len(trace.sites('fwd'))} fwd / {n_bwd} bwd / "
+              f"{len(trace.aux_sites())} aux sites)")
 
     # end-to-end acceptance: the workload zoo (grad vs 91-bit-bwd reference,
     # logit fidelity vs the uniform oracle, K-reorder stability, ... per
@@ -298,6 +351,7 @@ def refresh_arch(arch_id: str, args) -> dict:
         "validators": names,
         "fingerprint": fp,
         "trace": os.path.join("traces", f"{arch_id}.trace.json"),
+        "provenance": _provenance(),
     })
     print(res.describe())
 
@@ -341,11 +395,18 @@ def manifest_entry(arch_id: str, plan) -> dict:
         "modeled_energy_bwd_j": m.get("modeled_energy_bwd_j"),
         "baseline_energy_j": m.get("baseline_energy_j"),
         "energy_vs_baseline": m.get("energy_vs_baseline"),
+        # training-memory / comms byte axes (absent for gemm-only plans)
+        "bytes_resident_vs_fp32": m.get("bytes_resident_vs_fp32"),
+        "bytes_moved_vs_fp32": m.get("bytes_moved_vs_fp32"),
         "n_sites": len(plan.sites),
         "n_bwd_sites": sum(s.phase == "bwd" for s in plan.sites),
+        "n_aux_sites": sum(s.kind != "gemm" for s in plan.sites),
         "sites": [s.site for s in plan.sites],
         "fingerprint": m.get("fingerprint"),
         "trace": m.get("trace"),
+        # where this plan was searched/validated; absent = single-device
+        # (pre-provenance zoo entries)
+        "provenance": m.get("provenance"),
     }
 
 

@@ -13,7 +13,7 @@ from .fdp import dd_dot, fdp_dot, fdp_gemm, fma_dot
 from .generator import (DatapathReport, GeneratedGemm, datapath_report,
                         generate_gemm)
 from .dispatch import (FDP91, GemmPlan, GemmSite, PlanCacheStats, plan_gemm,
-                       plan_cache_info, plan_cache_stats, policy_from_plan,
+                       plan_cache_stats, policy_from_plan,
                        register_plan, reset_sites_seen, sites_seen,
                        widen_config)
 from .schedules import ScheduleZoo, preload_schedules
@@ -24,7 +24,7 @@ __all__ = [
     "get_format", "fdp_dot", "fdp_gemm", "fma_dot", "dd_dot",
     "generate_gemm", "GeneratedGemm", "DatapathReport", "datapath_report",
     "FDP91", "GemmPlan", "GemmSite", "PlanCacheStats", "plan_gemm",
-    "plan_cache_info", "plan_cache_stats", "policy_from_plan",
+    "plan_cache_stats", "policy_from_plan",
     "register_plan", "reset_sites_seen", "sites_seen", "widen_config",
     "ScheduleZoo", "preload_schedules",
 ]

@@ -39,7 +39,6 @@ import contextlib
 import dataclasses
 import math
 import threading
-import warnings
 from functools import partial
 from typing import Optional, Union
 
@@ -191,6 +190,11 @@ class NumericsPolicy:
     default: GemmConfig = GemmConfig()
     overrides: tuple = ()                      # tuple[(pattern, GemmConfig)]
     name: str = "default"
+    # Non-GEMM precision assignments keyed by qformat site keys
+    # ("opt.m@state", "grad_psum@coll") mapping to qformat.QuantConfig.
+    # Kept out of ``overrides`` on purpose: aux keys don't parse as
+    # GemmSites, and GemmConfig consumers must never see them.
+    aux: tuple = ()                            # tuple[(site_key, QuantConfig)]
 
     def lookup(self, site: Union[str, GemmSite]) -> GemmConfig:
         s = GemmSite.parse(site)
@@ -201,9 +205,21 @@ class NumericsPolicy:
                 best, best_score = cfg, sc
         return best if best is not None else self.default
 
+    def aux_lookup(self, site_key: str):
+        """QuantConfig for an aux (state/collective) site key, or None when
+        the policy leaves that site at its fp32 default."""
+        for key, cfg in self.aux:
+            if key == site_key:
+                return cfg
+        return None
+
     def with_override(self, pattern: str, cfg: GemmConfig) -> "NumericsPolicy":
         return dataclasses.replace(
             self, overrides=((pattern, cfg),) + tuple(self.overrides))
+
+    def with_aux(self, site_key: str, cfg) -> "NumericsPolicy":
+        kept = tuple((k, c) for k, c in self.aux if k != site_key)
+        return dataclasses.replace(self, aux=((site_key, cfg),) + kept)
 
 
 MXU_BF16 = NumericsPolicy(GemmConfig(BF16, None, "native"), name="mxu_bf16")
@@ -434,14 +450,6 @@ def register_plan(m: int, n: int, k: int, plan: GemmPlan, *, fmt,
 def plan_cache_stats() -> PlanCacheStats:
     with _PLAN_LOCK:
         return PlanCacheStats(size=len(_PLAN_CACHE), **_PLAN_STATS)
-
-
-def plan_cache_info() -> dict:
-    """Deprecated: use ``plan_cache_stats()`` (typed). Kept one release as a
-    dict-shaped shim for external callers."""
-    warnings.warn("plan_cache_info() is deprecated; use plan_cache_stats()",
-                  DeprecationWarning, stacklevel=2)
-    return plan_cache_stats().as_dict()
 
 
 def clear_plan_cache() -> None:

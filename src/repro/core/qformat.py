@@ -1,0 +1,286 @@
+"""Block-scaled low-bit storage formats for non-GEMM precision sites.
+
+The paper tailors the accumulator of each GEMM; this module extends the same
+site-identity discipline to the two dominant *byte* consumers of training —
+optimizer state (bytes resident: fp32 Adam moments are ~2x params) and
+gradient collectives (bytes moved: the all-reduce payload) — so the tailoring
+search can trade them on a Pareto frontier exactly like accumulator energy.
+
+Site identity
+-------------
+Non-GEMM sites get their own canonical key grammar, disjoint from
+``GemmSite`` keys by construction (GemmSite names may not contain ``.`` or
+``@``, and its phases are only fwd/bwd):
+
+  * ``StateSite("opt.m")``  -> ``"opt.m@state"``   (bytes *resident*)
+  * ``CollectiveSite("grad_psum")`` -> ``"grad_psum@coll"`` (bytes *moved*)
+
+``site_kind`` classifies any site key ("gemm" / "state" / "collective"), so
+plan documents, the search and the policy layer can mix the three kinds
+without ambiguity.
+
+Format
+------
+``QuantConfig(bits, block)`` is a block-scaled integer format: values are
+grouped into blocks of ``block`` elements, each block carries one power-of-two
+exponent sized to its max magnitude, and elements are rounded onto that 2^lsb
+grid as signed ``bits``-wide integers. Power-of-two scales keep every step of
+quantize -> dequantize exactly representable in f32, so the round trip is
+deterministic and bit-identical between eager and jit execution — the same
+property the fixed-point accumulators are built on. ``mode="fp32"`` is the
+identity format (the un-quantized reference point on the byte axis).
+
+The emulation carries the integer payload in int8/int16 device arrays (the
+resident-byte saving is real, not modeled); the per-block exponent rides as
+int8. Modeled wire/resident bytes per element are ``bits/8 + 1/block``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# Emulation floor for an all-zero block's exponent (any value works — the
+# payload is all zeros — but it must be the SAME value everywhere for the
+# eager/jit and cross-device bit-equality contracts).
+ZERO_BLOCK_EXP = -126
+
+# ---------------------------------------------------------------------------
+# Site identity
+# ---------------------------------------------------------------------------
+STATE_SUFFIX = "@state"
+COLL_SUFFIX = "@coll"
+
+
+def site_kind(key: str) -> str:
+    """Classify a site key: "state" / "collective" for the aux grammars
+    above, else "gemm" (the key may still fail GemmSite.parse — kind says
+    which parser is responsible, not that the key is well-formed)."""
+    if key.endswith(STATE_SUFFIX):
+        return "state"
+    if key.endswith(COLL_SUFFIX):
+        return "collective"
+    return "gemm"
+
+
+def _check_aux_name(name: str, who: str) -> None:
+    if not name or "@" in name or "*" in name:
+        raise ValueError(f"{who} name {name!r} must be non-empty and free of "
+                         "'@'/'*' (dots are allowed: 'opt.m')")
+
+
+@dataclasses.dataclass(frozen=True)
+class StateSite:
+    """Identity of one persistent-state tensor family (e.g. the Adam first
+    moment across the whole parameter tree). ``namespace`` groups sites for
+    attribution/wiring; the canonical key carries only the name."""
+
+    name: str                       # "opt.m", "opt.v", "ema"
+    namespace: str = "opt"
+
+    def __post_init__(self):
+        _check_aux_name(self.name, "StateSite")
+
+    @property
+    def key(self) -> str:
+        return f"{self.name}{STATE_SUFFIX}"
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveSite:
+    """Identity of one cross-device reduction payload (e.g. the gradient
+    all-reduce of the data-parallel train step)."""
+
+    name: str                       # "grad_psum"
+    namespace: str = "train"
+
+    def __post_init__(self):
+        _check_aux_name(self.name, "CollectiveSite")
+
+    @property
+    def key(self) -> str:
+        return f"{self.name}{COLL_SUFFIX}"
+
+
+# The train loop's canonical aux sites.
+OPT_M_SITE = StateSite("opt.m")
+OPT_V_SITE = StateSite("opt.v")
+GRAD_PSUM_SITE = CollectiveSite("grad_psum")
+
+
+# ---------------------------------------------------------------------------
+# Format
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """One block-scaled integer format (or the fp32 identity).
+
+    ``error_feedback`` only matters for collective sites: the residual of
+    each quantization is carried and added back next step (1-bit-Adam-style),
+    so the *time-average* of what was sent converges onto the true signal.
+    """
+
+    bits: int = 8                   # signed integer payload width
+    block: int = 64                 # elements per shared exponent
+    mode: str = "block"             # "block" | "fp32"
+    error_feedback: bool = False
+
+    def __post_init__(self):
+        if self.mode not in ("block", "fp32"):
+            raise ValueError(f"QuantConfig mode {self.mode!r}")
+        if self.mode == "block":
+            if not 2 <= self.bits <= 16:
+                raise ValueError(f"bits={self.bits} outside the int8/int16 "
+                                 "emulation range [2, 16]")
+            if self.block < 1 or self.block & (self.block - 1):
+                raise ValueError(f"block={self.block} must be a power of two")
+
+    def tag(self) -> str:
+        if self.mode == "fp32":
+            return "fp32"
+        ef = "+ef" if self.error_feedback else ""
+        return f"q{self.bits}b{self.block}{ef}"
+
+    @property
+    def bytes_per_element(self) -> float:
+        """Modeled resident/wire bytes per element (int payload + one int8
+        exponent per block)."""
+        if self.mode == "fp32":
+            return 4.0
+        return self.bits / 8.0 + 1.0 / self.block
+
+    def storage_dtype(self):
+        return jnp.int8 if self.bits <= 8 else jnp.int16
+
+    def widen(self) -> "QuantConfig":
+        """The next point up the fidelity ladder (the upgrade loop's
+        fallback direction): more payload bits, then fp32."""
+        if self.mode == "fp32":
+            return self
+        if self.bits < 8:
+            return dataclasses.replace(self, bits=8)
+        if self.bits < 16:
+            return dataclasses.replace(self, bits=16)
+        return QuantConfig(mode="fp32", error_feedback=self.error_feedback)
+
+
+FP32_STATE = QuantConfig(mode="fp32")
+
+
+def parse_quant(text: str) -> QuantConfig:
+    """CLI spelling: "fp32", or "BITSxBLOCK" ("8x64"), with an optional
+    "+ef" error-feedback suffix ("4x32+ef")."""
+    t = text.strip().lower()
+    ef = t.endswith("+ef")
+    if ef:
+        t = t[:-len("+ef")]
+    if t == "fp32":
+        return QuantConfig(mode="fp32", error_feedback=ef)
+    try:
+        bits, block = t.split("x")
+        return QuantConfig(bits=int(bits), block=int(block),
+                           error_feedback=ef)
+    except (ValueError, TypeError):
+        raise ValueError(
+            f"bad quant format {text!r}: expected 'fp32' or 'BITSxBLOCK' "
+            "like '8x64' (optional '+ef' suffix)") from None
+
+
+def quant_bytes(n_elements: int, cfg: QuantConfig) -> float:
+    """Modeled bytes for ``n_elements`` under ``cfg`` (whole blocks)."""
+    if cfg.mode == "fp32":
+        return 4.0 * n_elements
+    n_blocks = -(-n_elements // cfg.block)
+    return n_blocks * (cfg.block * cfg.bits / 8.0 + 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Block quantization math
+# ---------------------------------------------------------------------------
+def block_exponent(amax: jax.Array) -> jax.Array:
+    """int32 exponent e with 2^(e-1) <= amax < 2^e (frexp convention), so a
+    ``bits``-wide integer at lsb = e - (bits-1) covers the block. Zero blocks
+    land on ZERO_BLOCK_EXP; the result is clipped into int8 range."""
+    _, e = jnp.frexp(amax)
+    e = jnp.where(amax > 0, e, ZERO_BLOCK_EXP)
+    return jnp.clip(e, -126, 127).astype(jnp.int32)
+
+
+def _to_blocks(x: jax.Array, block: int):
+    flat = x.reshape(-1).astype(jnp.float32)
+    pad = (-flat.size) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, block)
+
+
+def block_scale(amax: jax.Array, bits: int):
+    """Per-block exponent + power-of-two scale such that every magnitude up
+    to ``amax`` is representable in ``bits`` signed integers WITHOUT
+    clipping: lsb = e - (bits-1), with the exponent bumped one octave when
+    ``amax`` itself would land past the signed limit (frexp mantissa above
+    ``1 - 2^-(bits-1)``). The no-clip guarantee is what keeps error feedback
+    bounded — a clipped top-of-block element would re-carry its unsent mass
+    every step and grow the residual linearly, never converging. All
+    comparisons are exact f32, so the choice is deterministic eager vs jit.
+    Returns ``(exp, scale)`` with ``scale = exp2(exp - (bits - 1))``."""
+    e = block_exponent(amax)
+    lsb = e - (bits - 1)
+    scale = jnp.exp2(lsb.astype(jnp.float32))
+    lim = 2.0 ** (bits - 1) - 1
+    e = jnp.clip(e + (amax > lim * scale).astype(jnp.int32), -126, 127)
+    scale = jnp.exp2((e - (bits - 1)).astype(jnp.float32))
+    return e, scale
+
+
+def block_quantize(x: jax.Array, cfg: QuantConfig, *,
+                   rounding: str = "nearest") -> dict:
+    """-> {"q": int8/int16 (n_blocks, block), "exp": int8 (n_blocks,)}.
+
+    ``rounding="nearest"`` rounds onto each block's 2^lsb grid. The
+    ``block_scale`` exponent guarantees the block maximum itself never
+    clips, so |x - dequant(quantize(x))| <= 2^lsb per element, where lsb may
+    sit one octave above the frexp baseline for top-heavy blocks.
+    ``rounding="up"`` rounds magnitudes away from zero — the conservative
+    direction for quantities that sit in a denominator (a quantized Adam
+    second moment must never *understate* curvature, or the update blows up
+    by amax/eps where the true moment rounded to zero).
+    """
+    assert cfg.mode == "block", "fp32 mode has no quantized carrier"
+    blocks = _to_blocks(x, cfg.block)
+    e, scale = block_scale(jnp.max(jnp.abs(blocks), axis=1), cfg.bits)
+    lim = 2.0 ** (cfg.bits - 1) - 1
+    y = blocks / scale[:, None]
+    if rounding == "up":
+        y = jnp.sign(y) * jnp.ceil(jnp.abs(y))
+    elif rounding == "nearest":
+        y = jnp.round(y)
+    else:
+        raise ValueError(f"rounding {rounding!r}")
+    q = jnp.clip(y, -lim, lim)
+    return {"q": q.astype(cfg.storage_dtype()),
+            "exp": e.astype(jnp.int8)}
+
+
+def block_dequantize(carrier: dict, cfg: QuantConfig, shape,
+                     dtype=jnp.float32) -> jax.Array:
+    """Inverse of ``block_quantize`` back onto ``shape`` (drops padding).
+    int * power-of-two is exact in f32, so dequantization adds no error of
+    its own."""
+    lsb = carrier["exp"].astype(jnp.float32) - (cfg.bits - 1)
+    flat = (carrier["q"].astype(jnp.float32) * jnp.exp2(lsb)[:, None]
+            ).reshape(-1)
+    n = math.prod(shape) if shape else 1
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def quantize_roundtrip(x: jax.Array, cfg: QuantConfig) -> jax.Array:
+    """x projected onto the format's representable grid (what a reader of
+    the stored/sent payload reconstructs). Identity for fp32 mode."""
+    if cfg.mode == "fp32":
+        return x.astype(jnp.float32)
+    return block_dequantize(block_quantize(x, cfg), cfg, x.shape, x.dtype)

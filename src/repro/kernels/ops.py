@@ -9,13 +9,13 @@ Tiling is **GemmPlan-first**: every entry point takes ``plan: GemmPlan``
 (normally resolved by ``repro.core.dispatch`` from the plan cache / schedule
 zoo) and clamps it through ``GemmPlan.fit`` — the one place a deployable
 schedule is constructed, enforcing the ``SAFE_CHUNK`` carry-headroom bound
-shared with the kernel. The loose ``bm``/``bn``/``bk`` ints from the pre-zoo
-API are kept one release behind a DeprecationWarning.
+shared with the kernel. (The pre-zoo loose ``bm``/``bn``/``bk`` ints rode
+one release behind a DeprecationWarning and are gone: passing them now is a
+TypeError.)
 """
 
 from __future__ import annotations
 
-import warnings
 from functools import partial
 
 import jax
@@ -28,8 +28,8 @@ from repro.core.formats import FP32
 from .fdp_gemm import (MAX_BK, fdp_gemm_pallas, fdp_gemm_pallas_batched,
                        fdp_ragged_dw_pallas, fdp_ragged_gemm_pallas)
 
-# Pre-plan default tile, used when a caller passes neither plan nor the
-# deprecated loose ints (matches the old keyword defaults).
+# Default tile when a caller passes no plan (matches the historical
+# keyword defaults).
 _DEFAULT_TILE = (32, 32, 128)
 
 
@@ -37,34 +37,12 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def resolve_plan(plan, bm, bn, bk, M: int, N: int, K: int) -> GemmPlan:
-    """Normalize the tiling arguments of one kernel call into a fitted
-    GemmPlan. ``plan`` is the supported spelling; loose ``bm``/``bn``/``bk``
-    ints are deprecated (one release) and folded into a plan here."""
-    if (bm, bn, bk) != (None, None, None):
-        if plan is not None:
-            raise TypeError(
-                "pass tiling as plan=GemmPlan(...) only — mixing plan= with "
-                "the deprecated bm=/bn=/bk= ints would make two sources of "
-                "truth for one schedule")
-        warnings.warn(
-            "bm=/bn=/bk= tiling ints are deprecated; pass "
-            "plan=GemmPlan(bm, bn, bk) (kept one release)",
-            DeprecationWarning, stacklevel=3)
-        dm, dn, dk = _DEFAULT_TILE
-        plan = GemmPlan(bm if bm is not None else dm,
-                        bn if bn is not None else dn,
-                        bk if bk is not None else dk)
-    elif plan is None:
+def resolve_plan(plan, M: int, N: int, K: int) -> GemmPlan:
+    """Normalize the tiling argument of one kernel call into a fitted
+    GemmPlan — the one deployable-schedule constructor."""
+    if plan is None:
         plan = GemmPlan(*_DEFAULT_TILE)
     return plan.fit(M, N, K)
-
-
-def _fit_blocks(M: int, N: int, K: int, bm: int, bn: int, bk: int):
-    """Deprecated: ``GemmPlan.fit`` is the one schedule constructor now."""
-    warnings.warn("_fit_blocks is deprecated; use GemmPlan(bm, bn, bk)"
-                  ".fit(M, N, K)", DeprecationWarning, stacklevel=2)
-    return GemmPlan(bm, bn, bk).fit(M, N, K).tile
 
 
 @partial(jax.jit,
@@ -84,14 +62,12 @@ def _fdp_gemm_jit(a, b, *, spec, fmt, bm, bn, bk, interpret, impl):
 
 
 def fdp_gemm(a: jax.Array, b: jax.Array, *, spec: AccumulatorSpec, fmt=FP32,
-             plan: GemmPlan | None = None,
-             bm: int | None = None, bn: int | None = None,
-             bk: int | None = None, interpret: bool | None = None,
+             plan: GemmPlan | None = None, interpret: bool | None = None,
              impl: str = "vector") -> jax.Array:
     """GEMM with tailored FDP accumulation: (M,K)@(K,N) -> (M,N) f32."""
     M, K = a.shape
     _, N = b.shape
-    p = resolve_plan(plan, bm, bn, bk, M, N, K)
+    p = resolve_plan(plan, M, N, K)
     return _fdp_gemm_jit(a, b, spec=spec, fmt=fmt, bm=p.bm, bn=p.bn, bk=p.bk,
                          interpret=interpret, impl=impl)
 
@@ -115,14 +91,12 @@ def _fdp_gemm_batched_jit(a, b, *, spec, fmt, bm, bn, bk, interpret):
 
 def fdp_gemm_batched(a: jax.Array, b: jax.Array, *, spec: AccumulatorSpec,
                      fmt=FP32, plan: GemmPlan | None = None,
-                     bm: int | None = None, bn: int | None = None,
-                     bk: int | None = None,
                      interpret: bool | None = None) -> jax.Array:
     """Batched GEMM through the native 4-D grid: (B,M,K)@(B,K,N) -> (B,M,N)
     f32 as one pallas_call (the batch dim needs no padding — its block is 1)."""
     _, M, K = a.shape
     _, _, N = b.shape
-    p = resolve_plan(plan, bm, bn, bk, M, N, K)
+    p = resolve_plan(plan, M, N, K)
     return _fdp_gemm_batched_jit(a, b, spec=spec, fmt=fmt, bm=p.bm, bn=p.bn,
                                  bk=p.bk, interpret=interpret)
 
@@ -159,15 +133,12 @@ def matmul_batching(f2d, f3d):
 
 def fdp_gemm_nd(a: jax.Array, b: jax.Array, *, spec: AccumulatorSpec,
                 fmt=FP32, plan: GemmPlan | None = None,
-                bm: int | None = None, bn: int | None = None,
-                bk: int | None = None,
                 interpret: bool | None = None) -> jax.Array:
     """jnp.matmul-shaped entry point: 1-D promotion, numpy broadcasting of
     leading batch dims, then the 2-D kernel or the native batched grid."""
-    f2d = lambda x, y: fdp_gemm(x, y, spec=spec, fmt=fmt, plan=plan, bm=bm,
-                                bn=bn, bk=bk, interpret=interpret)
+    f2d = lambda x, y: fdp_gemm(x, y, spec=spec, fmt=fmt, plan=plan,
+                                interpret=interpret)
     f3d = lambda x, y: fdp_gemm_batched(x, y, spec=spec, fmt=fmt, plan=plan,
-                                        bm=bm, bn=bn, bk=bk,
                                         interpret=interpret)
     return matmul_batching(f2d, f3d)(a, b)
 
@@ -212,7 +183,7 @@ def fdp_ragged_gemm(x: jax.Array, w: jax.Array, group_sizes: jax.Array, *,
     """
     T, d = x.shape
     f = w.shape[2]
-    p = resolve_plan(plan, None, None, None, T, f, d)
+    p = resolve_plan(plan, T, f, d)
     return _fdp_ragged_gemm_jit(x, w, group_sizes, spec=spec, fmt=fmt,
                                 bm=p.bm, bn=p.bn, bk=p.bk, interpret=interpret)
 
@@ -253,6 +224,6 @@ def fdp_ragged_dw(x: jax.Array, g: jax.Array, group_sizes: jax.Array, *,
     f = g.shape[1]
     if group_sizes.shape != (num_groups,):
         raise ValueError(f"group_sizes {group_sizes.shape} != ({num_groups},)")
-    p = resolve_plan(plan, None, None, None, d, f, T)
+    p = resolve_plan(plan, d, f, T)
     return _fdp_ragged_dw_jit(x, g, group_sizes, spec=spec, fmt=fmt,
                               bm=p.bm, bn=p.bn, bk=p.bk, interpret=interpret)

@@ -22,8 +22,9 @@ from repro.core.accumulator import AccumulatorSpec
 from repro.core.dispatch import policy_from_plan, use_policy
 from repro.data.synthetic import SyntheticLM
 from repro.models.layers import Distribution, LOCAL
+from repro.core.qformat import parse_quant
 from repro.train.loop import Trainer, make_train_step
-from repro.train.optimizer import adamw, cosine_schedule
+from repro.train.optimizer import adamw, cosine_schedule, state_quant_from_policy
 
 
 def main(argv=None):
@@ -40,7 +41,13 @@ def main(argv=None):
     ap.add_argument("--fdp-grad", action="store_true",
                     help="fixed-point (order-invariant) grad accumulation")
     ap.add_argument("--precision-plan", default=None,
-                    help="train under a repro.numerics PrecisionPlan JSON")
+                    help="train under a repro.numerics PrecisionPlan JSON "
+                         "(v3 plans may also assign optimizer-state and "
+                         "collective formats — honored automatically)")
+    ap.add_argument("--opt-precision", default=None,
+                    help="store Adam moments block-scaled: 'fp32', "
+                         "'BITSxBLOCK' ('8x64'), or 'M,V' per-moment "
+                         "('8x64,8x32'); overrides the plan's @state sites")
     ap.add_argument("--mesh", default=None,
                     help="RxC (data x model) device mesh, e.g. 2x4")
     ap.add_argument("--profile", default="fsdp",
@@ -59,10 +66,26 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    opt = adamw(lr=cosine_schedule(args.lr, warmup=10, total=args.steps))
     fdp_spec = AccumulatorSpec(ovf=10, msb=10, lsb=-20) if args.fdp_grad else None
     policy = (policy_from_plan(args.precision_plan)
               if args.precision_plan else None)
+    # optimizer-state formats: --opt-precision wins, else the plan's
+    # opt.m@state / opt.v@state assignments (state_quant_from_policy)
+    squant = state_quant_from_policy(policy)
+    if args.opt_precision:
+        parts = [p.strip() for p in args.opt_precision.split(",")]
+        if len(parts) not in (1, 2):
+            raise SystemExit("--opt-precision takes 'FMT' or 'M_FMT,V_FMT'")
+        cfgs = [parse_quant(p) for p in parts]
+        if len(cfgs) == 1:
+            cfgs = cfgs * 2
+        squant = {m: c for m, c in zip(("mu", "nu"), cfgs)
+                  if c.mode == "block"} or None
+    opt = adamw(lr=cosine_schedule(args.lr, warmup=10, total=args.steps),
+                state_quant=squant)
+    if squant:
+        print("[train] quantized optimizer state: "
+              + ", ".join(f"{m}={c.tag()}" for m, c in sorted(squant.items())))
     dist, place = LOCAL, None
     if args.mesh:
         from repro.launch import sharding as shd

@@ -15,15 +15,17 @@
 #                a NumericsPolicy with per-site overrides (--precision-plan)
 from .trace import (TRACE_VERSION, CalibrationTrace, SiteProfile, calibrate,
                     config_fingerprint, load_trace)
-from .candidates import Candidate, enumerate_candidates
+from .candidates import (Candidate, QuantCandidate, enumerate_candidates,
+                         enumerate_quant_candidates)
 from .search import (Evaluated, SearchResult, evaluate_candidates,
-                     pareto_frontier, search)
+                     evaluate_quant_candidates, pareto_frontier, search)
 from .plan import (PLAN_VERSION, PrecisionPlan, SitePlan, load_plan)
 
 __all__ = [
     "TRACE_VERSION", "CalibrationTrace", "SiteProfile", "calibrate",
     "config_fingerprint", "load_trace",
-    "Candidate", "enumerate_candidates",
+    "Candidate", "QuantCandidate", "enumerate_candidates",
+    "enumerate_quant_candidates", "evaluate_quant_candidates",
     "Evaluated", "SearchResult", "evaluate_candidates", "pareto_frontier",
     "search",
     "PLAN_VERSION", "PrecisionPlan", "SitePlan", "load_plan",

@@ -25,6 +25,7 @@ from repro.core.accumulator import AccumulatorSpec
 from repro.core.dispatch import GemmConfig
 from repro.core.formats import BF16, FP32, PositFormat
 from repro.core.generator import DatapathReport, datapath_report
+from repro.core.qformat import FP32_STATE, QuantConfig, quant_bytes
 
 from .trace import SiteProfile
 
@@ -33,6 +34,11 @@ from .trace import SiteProfile
 # considered. Native (MXU fp32-accumulate) candidates ride along per format.
 DEFAULT_WIDTHS = (24, 40, 64)
 DEFAULT_FORMATS = (BF16, FP32)
+
+# Block-scaled grid for aux (state/collective) sites: payload bit widths and
+# elements-per-exponent block. fp32 rides along as the identity reference.
+QUANT_BITS = (4, 8, 16)
+QUANT_BLOCKS = (32, 64)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,4 +114,59 @@ def enumerate_candidates(
 
     if include_paper91:
         push(GemmConfig(FP32, AccumulatorSpec.paper_91bit(), fdp_mode))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantCandidate:
+    """One block-scaled format for an aux (state/collective) site, with its
+    modeled byte cost at the site's traced element count."""
+
+    cfg: QuantConfig
+    bytes_total: float
+
+    @property
+    def tag(self) -> str:
+        return self.cfg.tag()
+
+    def describe(self) -> str:
+        return f"{self.tag} ({self.bytes_total:.2e} B)"
+
+
+def enumerate_quant_candidates(
+        profile: SiteProfile, *,
+        bits: Sequence[int] = QUANT_BITS,
+        blocks: Sequence[int] = QUANT_BLOCKS,
+        include_fp32: bool = True,
+        error_feedback: bool = False) -> list[QuantCandidate]:
+    """The pruned block-scaled grid for one aux site.
+
+    The trace prunes it the same way operand exponents prune accumulator
+    widths: the site's observed value range spans ``spread`` octaves
+    (a_exp_max - a_exp_min), and a per-block exponent already absorbs the
+    cross-block part of it, so payload widths beyond ``spread + 2`` bits only
+    add low bits that are zero on calibration data — those widths collapse
+    onto the narrowest sufficient point. Blocks wider than the site's element
+    count are dropped (one real exponent would cover everything already).
+    """
+    ea, eb = profile.a_exp_max, profile.a_exp_min
+    spread = (ea - eb) if (ea is not None and eb is not None) else None
+    n = max(int(profile.macs), 1)            # macs == elements for aux sites
+    all_blocks = sorted(set(int(x) for x in blocks))
+    usable = [blk for blk in all_blocks if blk <= n] or all_blocks[:1]
+    out, seen = [], set()
+    for b in sorted(set(int(x) for x in bits)):
+        if spread is not None:
+            b = min(b, max(2, spread + 2))
+        for blk in usable:
+            cfg = QuantConfig(bits=b, block=blk,
+                              error_feedback=error_feedback)
+            if cfg in seen:
+                continue
+            seen.add(cfg)
+            out.append(QuantCandidate(cfg, quant_bytes(n, cfg)))
+    if include_fp32:
+        cfg = FP32_STATE
+        if cfg not in seen:
+            out.append(QuantCandidate(cfg, quant_bytes(n, cfg)))
     return out

@@ -16,6 +16,18 @@ that the deployed policy installs as a ``*@bwd`` wildcard override, so any
 gradient GEMM the search did not assign runs wide instead of silently
 inheriting its forward twin's (possibly narrow) datapath.
 
+Schema v3 (aux precision sites)
+-------------------------------
+v3 adds non-GEMM *aux* sites: optimizer-state (``opt.m@state``) and
+collective (``grad_psum@coll``) assignments whose cfg is a block-scaled
+``repro.core.qformat.QuantConfig`` (serialized under a ``quant`` key, so a
+site's cfg shape says which config family it is). Each ``SitePlan`` carries
+``kind`` ("gemm" | "state" | "collective") and, for aux sites,
+``bytes_total`` — the modeled resident/wire bytes that are the search's
+Pareto cost for that site. ``to_policy`` routes aux assignments into
+``NumericsPolicy.aux`` (never ``overrides``: aux keys are not GemmSites).
+v2 documents are pure-GEMM and load transparently.
+
 v1 documents load transparently: their plain-name assignments become
 forward-only under the phase-aware policy lookup (exactly the v1 dispatch
 semantics), ``bwd_default`` is synthesized by widening the plan default
@@ -33,11 +45,16 @@ from repro.core.accumulator import AccumulatorSpec
 from repro.core.dispatch import (GemmConfig, GemmSite, NumericsPolicy,
                                  widen_config)
 from repro.core.formats import get_format
+from repro.core.qformat import QuantConfig, site_kind
 
-PLAN_VERSION = 2
+PLAN_VERSION = 3
 
 
-def _cfg_to_json(cfg: GemmConfig) -> dict:
+def _cfg_to_json(cfg) -> dict:
+    if isinstance(cfg, QuantConfig):
+        return {"quant": {"bits": cfg.bits, "block": cfg.block,
+                          "mode": cfg.mode,
+                          "error_feedback": cfg.error_feedback}}
     acc = None
     if cfg.acc is not None:
         acc = {"ovf": cfg.acc.ovf, "msb": cfg.acc.msb, "lsb": cfg.acc.lsb,
@@ -46,7 +63,14 @@ def _cfg_to_json(cfg: GemmConfig) -> dict:
     return {"fmt": cfg.fmt.name, "acc": acc, "mode": cfg.mode}
 
 
-def _cfg_from_json(d: dict) -> GemmConfig:
+def _cfg_from_json(d: dict):
+    if "quant" in d:
+        q = d["quant"]
+        return QuantConfig(bits=int(q.get("bits", 8)),
+                           block=int(q.get("block", 64)),
+                           mode=q.get("mode", "block"),
+                           error_feedback=bool(q.get("error_feedback",
+                                                     False)))
     acc = None
     if d.get("acc") is not None:
         a = d["acc"]
@@ -63,24 +87,36 @@ class SitePlan:
     the canonical GemmSite key (phase-qualified for backward sites)."""
 
     site: str
-    cfg: GemmConfig
+    cfg: object                            # GemmConfig | QuantConfig (aux)
+    kind: str = "gemm"                     # "gemm" | "state" | "collective"
     error_bits: Optional[float] = None     # vs the site's bit-exact oracle
     energy_j: Optional[float] = None       # modeled, at traced MAC count
-    macs: int = 0
+    macs: int = 0                          # aux sites: element count
     latency_us: Optional[float] = None
+    bytes_total: Optional[float] = None    # aux sites: modeled resident/wire
 
     @property
     def gemm_site(self) -> GemmSite:
+        if self.kind != "gemm":
+            raise ValueError(f"{self.site!r} is a {self.kind} site, "
+                             "not a GemmSite")
         return GemmSite.parse(self.site)
 
     @property
     def phase(self) -> str:
+        """Autodiff phase for GEMM sites; aux sites report their kind (they
+        live outside the fwd/bwd namespace, so ``phase_sites`` never
+        captures them)."""
+        if self.kind != "gemm":
+            return self.kind
         return self.gemm_site.phase
 
     def to_json(self) -> dict:
         d = {"site": self.site, "cfg": _cfg_to_json(self.cfg),
              "macs": self.macs}
-        for k in ("error_bits", "energy_j", "latency_us"):
+        if self.kind != "gemm":
+            d["kind"] = self.kind
+        for k in ("error_bits", "energy_j", "latency_us", "bytes_total"):
             v = getattr(self, k)
             if v is not None:
                 d[k] = v
@@ -89,9 +125,11 @@ class SitePlan:
     @classmethod
     def from_json(cls, d: dict) -> "SitePlan":
         return cls(site=d["site"], cfg=_cfg_from_json(d["cfg"]),
+                   kind=d.get("kind", "gemm"),
                    error_bits=d.get("error_bits"),
                    energy_j=d.get("energy_j"), macs=int(d.get("macs", 0)),
-                   latency_us=d.get("latency_us"))
+                   latency_us=d.get("latency_us"),
+                   bytes_total=d.get("bytes_total"))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,6 +153,12 @@ class PrecisionPlan:
     def phase_sites(self, phase: str) -> tuple:
         return tuple(s for s in self.sites if s.phase == phase)
 
+    def gemm_sites(self) -> tuple:
+        return tuple(s for s in self.sites if s.kind == "gemm")
+
+    def aux_sites(self) -> tuple:
+        return tuple(s for s in self.sites if s.kind != "gemm")
+
     def to_policy(self) -> NumericsPolicy:
         """The NumericsPolicy this plan deploys: exact-match per-site
         overrides over the plan default, with the ``*@bwd`` widened fallback
@@ -122,14 +166,17 @@ class PrecisionPlan:
         always win over it. A plan constructed without ``bwd_default``
         deploys ``widen_config(default)`` there — the invariant holds for
         in-memory plans exactly as for loaded ones, so ``to_policy`` and
-        save→load→``to_policy`` agree on every site."""
-        overrides = [(s.site, s.cfg) for s in self.sites]
+        save→load→``to_policy`` agree on every site. Aux (state/collective)
+        assignments deploy through the policy's ``aux`` channel, read by the
+        optimizer and the mesh train step — never through ``overrides``."""
+        overrides = [(s.site, s.cfg) for s in self.gemm_sites()]
         overrides.append(
             ("*@bwd", self.bwd_default or widen_config(self.default)))
         return NumericsPolicy(
             default=self.default,
             overrides=tuple(overrides),
-            name=f"plan:{self.name}")
+            name=f"plan:{self.name}",
+            aux=tuple((s.site, s.cfg) for s in self.aux_sites()))
 
     # -- serialization -----------------------------------------------------
     def to_json(self) -> dict:
@@ -160,7 +207,22 @@ class PrecisionPlan:
                    else GemmConfig())
         sites = tuple(SitePlan.from_json(s) for s in d["sites"])
         for s in sites:
-            GemmSite.parse(s.site)         # reject malformed site keys early
+            # reject malformed/mislabeled site keys early: the key's grammar
+            # must agree with the stored kind, GEMM keys must parse, and the
+            # cfg family must match the kind.
+            k = site_kind(s.site)
+            if k != s.kind:
+                raise ValueError(
+                    f"site {s.site!r} is keyed as a {k} site but the "
+                    f"document labels it {s.kind!r}")
+            if k == "gemm":
+                GemmSite.parse(s.site)
+                if isinstance(s.cfg, QuantConfig):
+                    raise ValueError(f"GEMM site {s.site!r} carries a quant "
+                                     "cfg")
+            elif not isinstance(s.cfg, QuantConfig):
+                raise ValueError(f"aux site {s.site!r} carries a non-quant "
+                                 "cfg")
         meta = dict(d.get("meta", {}))
         if version <= 1:
             # v1 -> v2 up-conversion: plain-name assignments are forward-only
@@ -169,6 +231,13 @@ class PrecisionPlan:
             # silently inherit a narrow forward datapath.
             bwd_default = widen_config(default)
             meta.setdefault("migrated_from", version or 1)
+        elif version < PLAN_VERSION:
+            # v2 -> v3 is additive (aux site kinds + bytes axes); pure-GEMM
+            # documents only need the provenance stamp.
+            meta.setdefault("migrated_from", version)
+            bwd_default = (_cfg_from_json(d["bwd_default"])
+                           if d.get("bwd_default") is not None
+                           else widen_config(default))
         elif d.get("bwd_default") is not None:
             bwd_default = _cfg_from_json(d["bwd_default"])
         else:

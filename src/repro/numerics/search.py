@@ -25,37 +25,47 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
-from repro.core import dispatch, energy
+from repro.core import dispatch, energy, qformat
 from repro.core.accumulator import AccumulatorSpec
 from repro.core.dispatch import GemmConfig, NumericsPolicy
 from repro.core.formats import FP32
 from repro.core.metrics import correct_bits
 
 from .candidates import (DEFAULT_FORMATS, DEFAULT_WIDTHS, Candidate,
-                         enumerate_candidates)
+                         QuantCandidate, enumerate_candidates,
+                         enumerate_quant_candidates)
 from .plan import PrecisionPlan, SitePlan
 from .trace import CalibrationTrace, SiteProfile
 
 ERROR_CAP_BITS = 24.0          # f32 read-out: "exact" caps at full mantissa
+
+# Per-element correct bits an aux (state/collective) site must keep on its
+# calibration sample for its initial assignment. Tuned so the 8-bit
+# block-scaled point qualifies while 4-bit does not: EMA state and averaged
+# gradients tolerate ~2^-6 relative rounding (quant_opt validates the claim
+# end to end and upgrades the frontier when it doesn't hold).
+AUX_TARGET_BITS = 5.0
 
 
 @dataclasses.dataclass(frozen=True)
 class Evaluated:
     """A candidate with its measured position in the objective space."""
 
-    candidate: Candidate
+    candidate: Candidate                   # Candidate | QuantCandidate
     error_bits: float
     energy_j: float
     latency_us: Optional[float] = None
+    bytes_total: Optional[float] = None    # aux sites: modeled resident/wire
 
     @property
-    def cfg(self) -> GemmConfig:
+    def cfg(self):
         return self.candidate.cfg
 
     def describe(self) -> str:
         lat = f" {self.latency_us:.0f}us" if self.latency_us else ""
+        by = f" {self.bytes_total:.2e} B" if self.bytes_total else ""
         return (f"{self.candidate.tag:40s} {self.error_bits:5.1f} bits  "
-                f"{self.energy_j:.3e} J{lat}")
+                f"{self.energy_j:.3e} J{lat}{by}")
 
 
 def _apply_cfg(cfg: GemmConfig, a, b, site: str = "eval"):
@@ -120,9 +130,32 @@ def evaluate_candidates(profile: SiteProfile,
     return out
 
 
+def evaluate_quant_candidates(profile: SiteProfile,
+                              candidates: Sequence[QuantCandidate]
+                              ) -> list[Evaluated]:
+    """Round-trip the aux site's captured value sample through each
+    block-scaled format and score per-element correct bits against the
+    original values. Energy stays 0 (no MACs run here) — for aux sites the
+    cost axis is ``bytes_total``, the Pareto twin of modeled joules."""
+    if profile.sample_a is None:
+        raise ValueError(f"aux site {profile.site!r} has no captured sample "
+                         "(was it profiled via record_aux?)")
+    import jax.numpy as jnp
+
+    x = jnp.asarray(profile.sample_a, jnp.float32)
+    ref = np.asarray(x)
+    out = []
+    for c in candidates:
+        got = np.asarray(qformat.quantize_roundtrip(x, c.cfg))
+        bits = float(np.median(correct_bits(got, ref, cap=ERROR_CAP_BITS)))
+        out.append(Evaluated(c, bits, 0.0, bytes_total=c.bytes_total))
+    return out
+
+
 def pareto_frontier(points: Sequence[Evaluated]) -> list[Evaluated]:
-    """Non-dominated subset: maximize error_bits, minimize energy (and
-    latency when measured), sorted by ascending energy."""
+    """Non-dominated subset: maximize error_bits, minimize energy (plus
+    latency when measured, and bytes on aux sites), sorted by ascending
+    cost (energy, then bytes)."""
 
     def dominates(x: Evaluated, y: Evaluated) -> bool:
         ge = (x.error_bits >= y.error_bits and x.energy_j <= y.energy_j)
@@ -130,11 +163,15 @@ def pareto_frontier(points: Sequence[Evaluated]) -> list[Evaluated]:
         if x.latency_us is not None and y.latency_us is not None:
             ge = ge and x.latency_us <= y.latency_us
             gt = gt or x.latency_us < y.latency_us
+        if x.bytes_total is not None and y.bytes_total is not None:
+            ge = ge and x.bytes_total <= y.bytes_total
+            gt = gt or x.bytes_total < y.bytes_total
         return ge and gt
 
     front = [p for p in points
              if not any(dominates(q, p) for q in points if q is not p)]
-    return sorted(front, key=lambda p: (p.energy_j, -p.error_bits))
+    return sorted(front, key=lambda p: (p.energy_j, p.bytes_total or 0.0,
+                                        -p.error_bits))
 
 
 @dataclasses.dataclass
@@ -212,7 +249,8 @@ def search(trace: CalibrationTrace, budget_bits: float, *,
            validators: Optional[Sequence] = None,
            max_upgrades: int = 16,
            phases: Sequence[str] = ("fwd", "bwd"),
-           upgrade_phases: Sequence[str] = ("fwd",)) -> SearchResult:
+           upgrade_phases: Sequence[str] = ("fwd",),
+           aux_target_bits: float = AUX_TARGET_BITS) -> SearchResult:
     """Greedy per-site assignment meeting ``budget_bits`` end-to-end correct
     bits at minimum modeled energy.
 
@@ -221,6 +259,14 @@ def search(trace: CalibrationTrace, budget_bits: float, *,
     backward sites (``attn_qk@bwd.dA``) alongside the forward ones, and each
     traced phase gets its own per-site assignment. Unassigned bwd sites fall
     to the emitted plan's widened ``bwd_default``.
+
+    Aux sites (``opt.m@state`` / ``grad_psum@coll``, profiled via
+    ``record_aux``) are searched alongside: their candidate grid is the
+    block-scaled quant formats, their cost axis is *bytes* (resident for
+    state, moved for collectives) rather than joules, and the initial pick
+    is the fewest-bytes frontier point holding ``aux_target_bits`` on the
+    calibration sample. The same upgrade loop spends on them when a failing
+    validator (e.g. ``quant_opt``) attributes its deficit to their keys.
 
     End-to-end validation comes in two flavors:
 
@@ -247,9 +293,16 @@ def search(trace: CalibrationTrace, budget_bits: float, *,
     if validate is not None and validators:
         raise ValueError("pass either validate= (legacy scalar hook) or "
                          "validators= (workload zoo), not both")
-    profiles = {s: p for s, p in trace.profiles().items()
-                if p.sample is not None
+    all_profiles = trace.profiles()
+    profiles = {s: p for s, p in all_profiles.items()
+                if qformat.site_kind(s) == "gemm"
+                and p.sample is not None
                 and dispatch.GemmSite.parse(s).phase in phases}
+    # aux (state/collective) profiles ride along whenever the trace carries
+    # them — they have no phase namespace to restrict by.
+    aux_profiles = {s: p for s, p in all_profiles.items()
+                    if qformat.site_kind(s) != "gemm"
+                    and p.sample_a is not None}
     if not profiles:
         raise ValueError(
             f"trace has no calibrated sites with samples in phases {phases}")
@@ -267,6 +320,14 @@ def search(trace: CalibrationTrace, budget_bits: float, *,
         chosen = next((i for i, p in enumerate(frontier)
                        if p.error_bits >= site_target), len(frontier) - 1)
         decisions[site] = SiteDecision(site, prof, frontier, chosen)
+    for site, prof in sorted(aux_profiles.items()):
+        # searched assignments are the stateless formats; error feedback is a
+        # deployment choice layered on top (QuantizedGradReducer)
+        cands = enumerate_quant_candidates(prof)
+        frontier = pareto_frontier(evaluate_quant_candidates(prof, cands))
+        chosen = next((i for i, p in enumerate(frontier)
+                       if p.error_bits >= aux_target_bits), len(frontier) - 1)
+        decisions[site] = SiteDecision(site, prof, frontier, chosen)
 
     def assemble() -> PrecisionPlan:
         return _plan_from_decisions(name, decisions, budget_bits, default)
@@ -281,6 +342,7 @@ def search(trace: CalibrationTrace, budget_bits: float, *,
                 break
             upgradable = [
                 d for d in decisions.values() if d.can_upgrade()
+                and qformat.site_kind(d.site) == "gemm"
                 and dispatch.GemmSite.parse(d.site).phase in up_phases]
             if not upgradable:
                 break
@@ -356,16 +418,25 @@ def _plan_from_decisions(name, decisions, budget_bits,
     modeled = baseline = 0.0
     by_phase = {"fwd": 0.0, "bwd": 0.0}
     total_macs = 0
+    # bytes Pareto axes: resident (state sites) and moved (collective sites),
+    # each against the fp32 carrier of the same element count.
+    bytes_axes = {"state": [0.0, 0.0], "collective": [0.0, 0.0]}
     base_power = energy.gemm_power(FP32, AccumulatorSpec.paper_91bit())
     for site, d in sorted(decisions.items()):
         p = d.pick
-        sites.append(SitePlan(site=site, cfg=p.cfg,
+        kind = qformat.site_kind(site)
+        sites.append(SitePlan(site=site, cfg=p.cfg, kind=kind,
                               error_bits=p.error_bits, energy_j=p.energy_j,
-                              macs=d.profile.macs, latency_us=p.latency_us))
-        modeled += p.energy_j
-        by_phase[dispatch.GemmSite.parse(site).phase] += p.energy_j
-        baseline += base_power.energy_joules(d.profile.macs)
-        total_macs += d.profile.macs
+                              macs=d.profile.macs, latency_us=p.latency_us,
+                              bytes_total=p.bytes_total))
+        if kind == "gemm":
+            modeled += p.energy_j
+            by_phase[dispatch.GemmSite.parse(site).phase] += p.energy_j
+            baseline += base_power.energy_joules(d.profile.macs)
+            total_macs += d.profile.macs
+        else:
+            bytes_axes[kind][0] += p.bytes_total or 0.0
+            bytes_axes[kind][1] += 4.0 * d.profile.macs
     meta = {
         "modeled_energy_j": modeled,
         "modeled_energy_fwd_j": by_phase["fwd"],
@@ -374,6 +445,13 @@ def _plan_from_decisions(name, decisions, budget_bits,
         "energy_vs_baseline": modeled / baseline if baseline else None,
         "total_macs": total_macs,
     }
+    for kind, key in (("state", "bytes_resident"), ("collective",
+                                                    "bytes_moved")):
+        got, fp32 = bytes_axes[kind]
+        if fp32:
+            meta[key] = got
+            meta[f"{key}_fp32"] = fp32
+            meta[f"{key}_vs_fp32"] = got / fp32
     default = default or GemmConfig()
     return PrecisionPlan(name=name, sites=tuple(sites),
                          default=default,

@@ -41,7 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dispatch
+from repro.core import dispatch, qformat
 from repro.core.accumulator import AccumulatorSpec
 from repro.core.formats import PositFormat
 
@@ -290,15 +290,62 @@ class CalibrationTrace:
                 p.sample_a = sample_a
                 p.sample_b = sample_b
 
+    def record_aux(self, site, values, *, sample_max: int = 4096) -> None:
+        """Profile a non-GEMM precision site (``opt.m@state``,
+        ``grad_psum@coll``) from a host-side pass over its value tree.
+
+        The same ``SiteProfile`` container is reused with the value-stream
+        reading: the a_* magnitude extremes hold the *values'* dynamic range
+        (which prunes the quant-candidate bit grid exactly as operand
+        exponents prune accumulator widths), ``macs`` counts *elements* (the
+        bytes denominator), and ``sample_a`` carries a 1-D evenly-strided
+        subsample the search round-trips through candidate formats.
+        ``sample_b`` stays None — aux sites have one value stream, not an
+        operand pair — and persistence handles that unchanged.
+        """
+        site = getattr(site, "key", site)        # StateSite/CollectiveSite
+        if qformat.site_kind(site) == "gemm":
+            raise ValueError(f"record_aux got GEMM-keyed site {site!r}; aux "
+                             "sites end in '@state' or '@coll'")
+        leaves = [np.asarray(v, np.float32).reshape(-1)
+                  for v in jax.tree.leaves(values)]
+        flat = (np.concatenate(leaves) if leaves
+                else np.zeros((0,), np.float32))
+        a = np.abs(flat)
+        nz = a[a > 0]
+        amax = float(a.max()) if a.size else 0.0
+        amin = float(nz.min()) if nz.size else math.inf
+        stride = max(1, flat.size // sample_max)
+        sample = flat[::stride][:sample_max].copy()
+        with self._lock:
+            p = self._profiles.setdefault(site, SiteProfile(site))
+            p.calls += 1
+            p.macs += flat.size
+            p.max_k = max(p.max_k, 1)
+            p.a_abs_max = max(p.a_abs_max, amax)
+            p.out_abs_max = max(p.out_abs_max, amax)
+            if math.isfinite(amin):
+                p.a_abs_min_nz = min(p.a_abs_min_nz, amin)
+                p.out_abs_min_nz = min(p.out_abs_min_nz, amin)
+            if p.sample_a is None:
+                p.sample_a = sample
+
     # -- queries -----------------------------------------------------------
     def sites(self, phase: Optional[str] = None) -> list[str]:
         """All traced site keys, optionally restricted to one phase
-        ("fwd" returns plain names, "bwd" the ``@bwd.*`` keys)."""
+        ("fwd" returns plain names, "bwd" the ``@bwd.*`` keys — aux
+        state/collective sites only appear in the unfiltered listing)."""
         with self._lock:
             keys = sorted(self._profiles)
         if phase is None:
             return keys
-        return [k for k in keys if dispatch.GemmSite.parse(k).phase == phase]
+        return [k for k in keys if qformat.site_kind(k) == "gemm"
+                and dispatch.GemmSite.parse(k).phase == phase]
+
+    def aux_sites(self) -> list[str]:
+        with self._lock:
+            return sorted(k for k in self._profiles
+                          if qformat.site_kind(k) != "gemm")
 
     def has_sample(self, site: str) -> bool:
         with self._lock:

@@ -1,1 +1,3 @@
-from .collectives import reproducible_psum, quantize_tree, dequantize_tree
+from .collectives import (reproducible_psum, quantize_tree, dequantize_tree,
+                          fdp_psum, quantized_psum, validate_overflow,
+                          CompressedGradReducer, QuantizedGradReducer)

@@ -22,7 +22,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import accumulator as acc
+from repro.core import qformat
 from repro.core.accumulator import AccumulatorSpec
+from repro.core.qformat import QuantConfig
 from repro.parallel.compat import axis_size
 
 _VALIDATE_OVERFLOW = False
@@ -129,6 +131,92 @@ def fdp_psum(limbs: jax.Array, axis_name, spec: AccumulatorSpec) -> jax.Array:
         f"{spec.num_limbs}")
     s = jax.lax.psum(limbs, axis_name)
     return acc.carry_normalize(spec, s)
+
+
+def quantized_psum(x: jax.Array, axis_name: str, cfg: QuantConfig, *,
+                   mean: bool = False, residual: Optional[jax.Array] = None):
+    """Block-scaled low-bit all-reduce — the bytes-*moved* counterpart to the
+    optimizer's bytes-resident site (``CollectiveSite("grad_psum")``).
+
+    Per-block shared exponents are agreed across devices first (pmax of the
+    local block amax — max is exact and associative, so every device lands on
+    the same exponent regardless of topology), then each device sends a
+    ``cfg.bits``-wide integer payload on that 2^lsb grid and the reduction
+    runs in exact integer space. Given the shared exponents, the result is
+    order-invariant like ``reproducible_psum``, but the grid adapts per block
+    instead of being fixed by an AccumulatorSpec — so 8-bit payloads survive
+    the ~2^40 dynamic range a gradient tree spans. Wire cost is modeled by
+    ``qformat.quant_bytes`` (bits/8 per element + one exponent byte per
+    block) vs 4 bytes/element for the fp32 path.
+
+    ``residual`` enables error feedback: what rounding/clipping dropped this
+    step is returned and should be added back next step (1-bit-Adam-style).
+    The grid is sized from ``x`` alone, NOT ``x + residual`` — accumulated
+    residual that spills past the grid clips (and is re-carried), which is
+    exactly what ``validate_overflow()`` + ``_check_overflow`` make loud.
+    Returns ``out`` without residual, ``(out, new_residual)`` with.
+
+    An fp32-mode cfg is the identity wire format (plain float psum).
+    """
+    if cfg.mode == "fp32":
+        out = jax.lax.psum(x.astype(jnp.float32), axis_name)
+        if mean:
+            out = out / axis_size(axis_name)
+        out = out.astype(x.dtype)
+        if residual is None:
+            return out
+        return out, jnp.zeros(x.shape, jnp.float32)
+
+    blocks = qformat._to_blocks(x, cfg.block)
+    amax = jax.lax.pmax(jnp.max(jnp.abs(blocks), axis=1), axis_name)
+    _, scale = qformat.block_scale(amax, cfg.bits)
+    payload = blocks
+    if residual is not None:
+        payload = payload + qformat._to_blocks(residual, cfg.block)
+    y = jnp.round(payload / scale[:, None])
+    lim = 2.0 ** (cfg.bits - 1) - 1
+    _check_overflow(y, lim)
+    q = jnp.clip(y, -lim, lim).astype(jnp.int32)
+    s = jax.lax.psum(q, axis_name)
+
+    def unblock(b):
+        return b.reshape(-1)[: x.size].reshape(x.shape)
+
+    out = unblock(s.astype(jnp.float32) * scale[:, None])
+    if mean:
+        out = out / axis_size(axis_name)
+    out = out.astype(x.dtype)
+    if residual is None:
+        return out
+    sent = unblock(q.astype(jnp.float32) * scale[:, None])
+    new_r = (x.astype(jnp.float32) + residual) - sent
+    return out, new_r
+
+
+@dataclasses.dataclass
+class QuantizedGradReducer:
+    """Error-feedback gradient averaging over ``quantized_psum`` — the
+    block-scaled sibling of ``CompressedGradReducer`` (whose single global
+    ⟨lsb,width⟩ grid can't span a whole gradient tree at low bits)."""
+
+    cfg: QuantConfig
+    axis_name: str
+
+    def init(self, params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def reduce(self, grads, residual):
+        """Returns (mean_grads, new_residual)."""
+        def one(g, r):
+            out, new_r = quantized_psum(g, self.axis_name, self.cfg,
+                                        mean=True, residual=r)
+            return out.astype(g.dtype), new_r
+
+        flat_g, td = jax.tree.flatten(grads)
+        flat_r = jax.tree.leaves(residual)
+        out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+        return (jax.tree.unflatten(td, [o[0] for o in out]),
+                jax.tree.unflatten(td, [o[1] for o in out]))
 
 
 @dataclasses.dataclass

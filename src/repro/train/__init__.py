@@ -1,2 +1,3 @@
-from .optimizer import adamw, cosine_schedule, Optimizer
+from .optimizer import (adamw, cosine_schedule, Optimizer,
+                        state_quant_from_policy, optimizer_state_bytes)
 from .loop import make_train_step, make_loss_fn, Trainer

@@ -177,7 +177,8 @@ def make_train_step(cfg, opt: Optimizer, dist: L.Distribution = L.LOCAL, *,
 # Mesh-sharded data parallelism with exact gradient reduction
 # ---------------------------------------------------------------------------
 def sharded_value_and_grad(loss_fn, axis_names, *,
-                           fdp_grad_spec: Optional[AccumulatorSpec] = None):
+                           fdp_grad_spec: Optional[AccumulatorSpec] = None,
+                           grad_quant=None):
     """Data-parallel value_and_grad for shard_map bodies: local gradients,
     cross-device mean over ``axis_names`` (a name or tuple of names).
 
@@ -188,6 +189,15 @@ def sharded_value_and_grad(loss_fn, axis_names, *,
     addition is associative and commutative). Without a spec, a plain float
     psum (fast, order-dependent). Loss/aux metrics reduce with float pmean
     either way — they are diagnostics, not part of the bit-equality contract.
+
+    ``grad_quant`` (a block-mode ``qformat.QuantConfig``) instead sends the
+    gradient mean through ``parallel.collectives.quantized_psum`` — a
+    block-scaled low-bit payload that moves ~``bits/32`` of the fp32 wire
+    bytes (the ``grad_psum@coll`` precision site). ``fdp_grad_spec`` takes
+    precedence: the repro-certified fixed-point path stays bit-exact and a
+    plan that pins it is never silently downgraded. Error feedback is a
+    stateful deployment concern — carry it with
+    ``parallel.collectives.QuantizedGradReducer``, not here.
     """
     from repro.parallel.compat import axis_size
 
@@ -203,6 +213,11 @@ def sharded_value_and_grad(loss_fn, axis_names, *,
                 q = jnp.round(g.astype(jnp.float32) / scale).astype(jnp.int32)
                 s = jax.lax.psum(q, axis_names)
                 return (s.astype(jnp.float32) * scale / n).astype(g.dtype)
+        elif grad_quant is not None and grad_quant.mode == "block":
+            from repro.parallel.collectives import quantized_psum
+
+            def one(g):
+                return quantized_psum(g, axis_names, grad_quant, mean=True)
         else:
             def one(g):
                 return (jax.lax.psum(g, axis_names) / n).astype(g.dtype)
@@ -218,7 +233,8 @@ def sharded_value_and_grad(loss_fn, axis_names, *,
 def make_mesh_train_step(cfg, opt: Optimizer, dist: L.Distribution, *,
                          remat: str = "none", z_loss: float = 0.0,
                          fdp_grad_spec: Optional[AccumulatorSpec] = None,
-                         numerics_policy: Optional[NumericsPolicy] = None):
+                         numerics_policy: Optional[NumericsPolicy] = None,
+                         grad_quant=None):
     """Train step sharded over the FLATTENED mesh (pure data parallelism):
     the global batch is split over ALL mesh axes jointly, each device runs
     the full (unsharded) model on its slice under the plan's policy, and
@@ -233,19 +249,29 @@ def make_mesh_train_step(cfg, opt: Optimizer, dist: L.Distribution, *,
     ``mesh_reshape_logits`` distributed check guards). PrecisionPlans apply
     unchanged: ``use_policy`` resolves at trace time, inside shard_map.
 
+    ``grad_quant=None`` reads the collective format off the policy's
+    ``grad_psum@coll`` aux assignment (searched plans wire themselves);
+    ``fdp_grad_spec`` still takes precedence inside
+    ``sharded_value_and_grad``, preserving the mesh-reshape bit-identity
+    contract on the repro path.
+
     Returns jitted ((params, opt_state), global_batch) -> ((params,
     opt_state), metrics); params/opt_state replicated, batch global.
     """
     from jax.sharding import PartitionSpec as P
 
+    from repro.core import qformat
     from repro.parallel.compat import shard_map_unchecked
 
     if numerics_policy is None:
         numerics_policy = dist.numerics_policy
+    if grad_quant is None and numerics_policy is not None:
+        grad_quant = numerics_policy.aux_lookup(qformat.GRAD_PSUM_SITE.key)
     mesh = dist.mesh
     axes = tuple(mesh.axis_names)
     loss_fn = make_loss_fn(cfg, L.LOCAL, z_loss=z_loss, remat=remat)
-    vg = sharded_value_and_grad(loss_fn, axes, fdp_grad_spec=fdp_grad_spec)
+    vg = sharded_value_and_grad(loss_fn, axes, fdp_grad_spec=fdp_grad_spec,
+                                grad_quant=grad_quant)
 
     def body(carry, batch):
         params, opt_state = carry

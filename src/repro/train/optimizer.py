@@ -1,14 +1,28 @@
 """From-scratch optimizers (no optax dependency): AdamW with decoupled weight
 decay, global-norm clipping, LR schedules, and optional fixed-point
-(paper-style) deterministic state dtypes."""
+(paper-style) deterministic state dtypes.
+
+Optimizer state is a precision *site*: pass ``state_quant`` (a mapping from
+moment name to ``repro.core.qformat.QuantConfig``) and the Adam moments live
+in block-scaled low-bit carriers between steps — dequantize, EMA-update,
+requantize — cutting the dominant training-memory consumer (fp32 moments are
+2x params) to ``bits/32`` of its fp32 bytes. The quantize/dequantize math is
+all power-of-two-exact f32, so a quantized step is deterministic and
+bit-identical between eager and jit execution. The site identities
+(``opt.m@state`` / ``opt.v@state``) let searched ``PrecisionPlan``s assign
+these formats the same way they assign GEMM accumulators; use
+``state_quant_from_policy`` to read the assignment off a deployed policy."""
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, Mapping, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+
+from ..core import qformat
+from ..core.qformat import QuantConfig
 
 
 class Optimizer(NamedTuple):
@@ -39,31 +53,101 @@ def clip_by_global_norm(tree, max_norm: float):
     return jax.tree.map(lambda x: x * scale, tree), norm
 
 
+def state_quant_from_policy(policy) -> Optional[dict]:
+    """Map a ``NumericsPolicy``'s aux assignments onto ``adamw``'s
+    ``state_quant`` argument (None when the policy holds both moments at
+    fp32 — i.e. no aux entries or explicit fp32 ones)."""
+    if policy is None or not getattr(policy, "aux", ()):
+        return None
+    out = {}
+    for moment, site in (("mu", qformat.OPT_M_SITE), ("nu", qformat.OPT_V_SITE)):
+        cfg = policy.aux_lookup(site.key)
+        if cfg is not None and cfg.mode == "block":
+            out[moment] = cfg
+    return out or None
+
+
+def _quantize_moment(tree, cfg: QuantConfig, *, sqrt_domain: bool = False):
+    """``sqrt_domain`` is the second-moment safety contract: nu is stored as
+    sqrt(nu) (halving the block exponent spread that squaring doubled) and
+    rounded *up* on the grid, so the dequantized denominator never
+    understates curvature. Without it, a dead parameter whose mu rounds up
+    to half a grid step while its nu rounds down to zero takes an
+    ``amax/eps``-sized update and the loss curve detonates within a step."""
+    if sqrt_domain:
+        quant = lambda x: qformat.block_quantize(
+            jnp.sqrt(jnp.maximum(x, 0.0).astype(jnp.float32)), cfg,
+            rounding="up")
+    else:
+        quant = lambda x: qformat.block_quantize(x, cfg)
+    return jax.tree.map(quant, tree)
+
+
+def _dequantize_moment(qtree, cfg: QuantConfig, params, *,
+                       sqrt_domain: bool = False):
+    def deq(c, p):
+        x = qformat.block_dequantize(c, cfg, p.shape)
+        return jnp.square(x) if sqrt_domain else x
+    return jax.tree.map(
+        deq, qtree, params,
+        is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+
+
+def optimizer_state_bytes(state, state_quant: Optional[Mapping] = None) -> int:
+    """Actual resident bytes of the moment carriers (device array nbytes,
+    so the saving is measured, not modeled)."""
+    total = 0
+    for moment in ("mu", "nu"):
+        for leaf in jax.tree.leaves(state[moment]):
+            total += leaf.nbytes
+    return total
+
+
 def adamw(lr: float | Callable = 1e-3, b1: float = 0.9, b2: float = 0.95,
           eps: float = 1e-8, weight_decay: float = 0.0,
           clip_norm: Optional[float] = 1.0,
-          state_dtype=jnp.float32) -> Optimizer:
+          state_dtype=jnp.float32,
+          state_quant: Optional[Mapping[str, QuantConfig]] = None) -> Optimizer:
+    """``state_quant`` maps moment names ("mu", "nu") to block-scaled
+    ``QuantConfig``s; listed moments persist as int8/int16 carriers and go
+    through dequant -> EMA update -> requant each step. Unlisted moments
+    keep ``state_dtype``. fp32-mode configs are treated as unlisted."""
     lr_fn = lr if callable(lr) else (lambda _: lr)
+    squant = {k: v for k, v in (state_quant or {}).items()
+              if v.mode == "block"}
+    for k in squant:
+        if k not in ("mu", "nu"):
+            raise ValueError(f"state_quant key {k!r} (expected 'mu'/'nu')")
 
     def init(params):
         zeros = lambda p: jnp.zeros(p.shape, state_dtype)
-        return {
+        state = {
             "mu": jax.tree.map(zeros, params),
             "nu": jax.tree.map(zeros, params),
             "step": jnp.zeros((), jnp.int32),
             "grad_norm": jnp.zeros((), jnp.float32),
         }
+        for moment, cfg in squant.items():
+            state[moment] = _quantize_moment(state[moment], cfg,
+                                             sqrt_domain=moment == "nu")
+        return state
 
     def update(grads, state, params):
         step = state["step"] + 1
         gnorm = jnp.float32(0)
         if clip_norm is not None:
             grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        mom = {}
+        for moment in ("mu", "nu"):
+            cfg = squant.get(moment)
+            mom[moment] = (state[moment] if cfg is None else
+                           _dequantize_moment(state[moment], cfg, params,
+                                              sqrt_domain=moment == "nu"))
         mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(state_dtype),
-                          state["mu"], grads)
+                          mom["mu"], grads)
         nu = jax.tree.map(
             lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(state_dtype)),
-            state["nu"], grads)
+            mom["nu"], grads)
         t = step.astype(jnp.float32)
         bc1 = 1 - b1 ** t
         bc2 = 1 - b2 ** t
@@ -76,6 +160,13 @@ def adamw(lr: float | Callable = 1e-3, b1: float = 0.9, b2: float = 0.95,
             return (-lr_t * u).astype(p.dtype)
 
         updates = jax.tree.map(upd, mu, nu, params)
+        # Requantize *after* the update is computed from the full-precision
+        # moments, so the parameter step sees this step's gradient exactly;
+        # only the carried-over EMA tail is rounded.
+        if "mu" in squant:
+            mu = _quantize_moment(mu, squant["mu"])
+        if "nu" in squant:
+            nu = _quantize_moment(nu, squant["nu"], sqrt_domain=True)
         return updates, {"mu": mu, "nu": nu, "step": step,
                          "grad_norm": gnorm}
 

@@ -18,6 +18,8 @@
 #   mesh             - bit-stability across device-mesh factorizations
 #                      (K-sharded sites through fdp_psum + the end-to-end
 #                      logits/gradients contract on multi-device hosts)
+#   quant_opt        - quantized-optimizer-state + compressed-collective
+#                      training-loss curves vs the fp32-state reference
 #
 # ``python -m repro.workloads --plan examples/plans/<arch>.json`` runs the
 # zoo against a checked-in plan (the CI smoke entry point).
@@ -29,11 +31,13 @@ from .base import (PROBE_BATCH, PROBE_SEED, PROBE_SEQ, SUMMARY_KEYS,
 from .gradients import LossGradient, bwd91_reference_policy
 from .inference import LogitFidelity
 from .mesh import MeshReshapeStability
+from .quant_opt import QuantizedOptimizer
 from .reproducibility import KReorderStability
 from .solve import IllConditionedSolve
 
 # the plan-zoo refresh's default gate: model-bound end-to-end validators
-# (the opt-in "solve" and "mesh" workloads join via --validators ... —
+# (the opt-in "solve", "mesh" and "quant_opt" workloads join via
+# --validators ... —
 # solve's operand ranges are deliberately hostile to DNN-calibrated
 # accumulators, and mesh's multi-shape sweep wants a multi-device host)
 DEFAULT_VALIDATORS = ("grad", "logits", "repro")
@@ -45,5 +49,6 @@ __all__ = [
     "make_probe_batch", "probed_sites", "register", "validation_summary",
     "LossGradient", "bwd91_reference_policy", "LogitFidelity",
     "MeshReshapeStability", "KReorderStability", "IllConditionedSolve",
+    "QuantizedOptimizer",
     "DEFAULT_VALIDATORS",
 ]

@@ -119,12 +119,27 @@ class Validator:
     def eligible_site(self, site_key: str, report: ValidationReport) -> bool:
         """May the upgrade loop spend an upgrade on ``site_key`` to fix this
         validator's deficit?  Attribution patterns win when present; else the
-        validator's declared phases."""
+        validator's declared phases.
+
+        Aux (state/collective) site keys never parse as GemmSites, so they
+        match only by exact attribution key or the kind wildcards
+        ``*@state`` / ``*@coll`` — and only validators that *declare* the
+        aux kind in ``phases`` may touch them without attribution."""
         from repro.core.dispatch import GemmSite, _match_score
+        from repro.core.qformat import site_kind
+        kind = site_kind(site_key)
+        if kind != "gemm":
+            if report.site_attribution:
+                suffix = site_key.rpartition("@")[2]
+                return any(pat == site_key or pat == f"*@{suffix}"
+                           for pat in report.site_attribution)
+            return kind in self.phases
         site = GemmSite.parse(site_key)
         if report.site_attribution:
+            gemm_pats = [p for p in report.site_attribution
+                         if site_kind(p) == "gemm"]
             return any(_match_score(pat, site) is not None
-                       for pat in report.site_attribution)
+                       for pat in gemm_pats)
         return site.phase in self.phases
 
 

@@ -199,6 +199,52 @@ def check_mesh_reshape_logits():
     print("CHECK mesh_reshape_logits OK")
 
 
+def check_quantized_psum():
+    """Block-scaled low-bit all-reduce over 8 devices: the mean lands within
+    grid resolution of the float mean, the error-feedback residual stays
+    bounded across steps (block_scale's no-clip exponent contract — a
+    clipped top-of-block element would grow it linearly), and
+    validate_overflow() stays quiet on benign payloads but fires on an
+    error-feedback spillover that would saturate the integer range."""
+    from repro.core.qformat import QuantConfig
+    from repro.parallel.collectives import quantized_psum, validate_overflow
+
+    mesh = jax.make_mesh((8,), ("dp",))
+    cfg = QuantConfig(4, 32)
+    g = jax.random.normal(jax.random.key(0), (8, 64)) * 0.1
+
+    def f(gl, rl):
+        out, new_r = quantized_psum(gl[0], "dp", cfg, mean=True,
+                                    residual=rl[0])
+        return out, new_r[None]
+
+    run = shard_map_unchecked(f, mesh=mesh, in_specs=(P("dp"), P("dp")),
+                              out_specs=(P(), P("dp")))
+    r = jnp.zeros_like(g)
+    for _ in range(6):
+        out, r = run(g, r)
+    # grid step per block: shared exponent from the cross-device block amax
+    # (one octave of bump headroom), 4-bit payload
+    amax = np.abs(np.asarray(g)).reshape(8, -1, cfg.block).max(axis=(0, 2))
+    step = np.exp2(np.ceil(np.log2(amax)) - (cfg.bits - 1) + 1)
+    ref = np.asarray(g).mean(0)
+    err = np.abs(np.asarray(out) - ref).reshape(-1, cfg.block)
+    assert (err <= 2 * step[:, None]).all(), "mean outside grid resolution"
+    rmax = np.abs(np.asarray(r)).reshape(8, -1, cfg.block).max(axis=(0, 2))
+    assert (rmax <= 2 * step).all(), "error-feedback residual not bounded"
+
+    with validate_overflow():                       # benign: must not fire
+        jax.block_until_ready(run(g, jnp.zeros_like(g)))
+    fired = False
+    try:
+        with validate_overflow():                   # spillover: must fire
+            jax.block_until_ready(run(g, 100.0 * jnp.ones_like(g)))
+    except Exception:
+        fired = True
+    assert fired, "overflow guard silent on saturating spillover"
+    print("CHECK quantized_psum OK")
+
+
 def check_compressed_grads():
     from repro.parallel.collectives import CompressedGradReducer
     mesh = jax.make_mesh((8,), ("dp",))
@@ -228,6 +274,7 @@ if __name__ == "__main__":
         "moe_ep_parity": check_moe_ep_parity,
         "pipeline_parity": check_pipeline_parity,
         "sp_forward_parity": check_sp_forward_parity,
+        "quantized_psum": check_quantized_psum,
         "compressed_grads": check_compressed_grads,
         "fdp_limb_psum": check_fdp_limb_psum,
         "mesh_reshape_logits": check_mesh_reshape_logits,

@@ -9,7 +9,7 @@ import pytest
 
 CHECKS = ["reproducible_psum", "moe_tp_parity", "moe_ep_parity",
           "pipeline_parity", "sp_forward_parity", "compressed_grads",
-          "fdp_limb_psum", "mesh_reshape_logits"]
+          "quantized_psum", "fdp_limb_psum", "mesh_reshape_logits"]
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

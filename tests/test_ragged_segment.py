@@ -19,9 +19,8 @@ import jax.numpy as jnp
 
 from repro.core import AccumulatorSpec, BF16, FP32
 from repro.core.dispatch import (GemmConfig, GemmPlan, NumericsPolicy,
-                                 clear_plan_cache, plan_cache_info,
-                                 plan_cache_stats, plan_gemm, ragged_gemm,
-                                 use_policy)
+                                 clear_plan_cache, plan_cache_stats,
+                                 plan_gemm, ragged_gemm, use_policy)
 from repro.core.schedules import (SCHEDULE_KIND, ScheduleZoo,
                                   preload_schedules, schedule_fingerprint)
 from repro.kernels import ops as kops
@@ -266,30 +265,33 @@ def test_checked_in_schedule_zoo_loads():
 
 
 # ---------------------------------------------------------------------------
-# GemmPlan-first API: deprecation shims
+# GemmPlan-first API: the deprecation window is closed
 # ---------------------------------------------------------------------------
-def test_loose_tile_ints_deprecated_but_equal(rng):
+def test_loose_tile_ints_removed(rng):
+    """PR-8 deprecated the loose bm/bn/bk ints for one release; they are now
+    hard TypeErrors — plan=GemmPlan(...) is the only tiling spelling."""
     a = jnp.asarray(rng.standard_normal((16, 24)), jnp.float32)
     b = jnp.asarray(rng.standard_normal((24, 8)), jnp.float32)
-    want = kops.fdp_gemm(a, b, spec=SPEC, plan=GemmPlan(8, 8, 16))
-    with pytest.warns(DeprecationWarning):
-        got = kops.fdp_gemm(a, b, spec=SPEC, bm=8, bn=8, bk=16)
-    np.testing.assert_array_equal(_bits(got), _bits(want))
-
-
-def test_mixing_plan_and_ints_raises(rng):
-    a = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
-    b = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
     with pytest.raises(TypeError):
-        kops.fdp_gemm(a, b, spec=SPEC, plan=GemmPlan(8, 8, 8), bm=8)
+        kops.fdp_gemm(a, b, spec=SPEC, bm=8, bn=8, bk=16)
+    with pytest.raises(TypeError):
+        kops.fdp_gemm(a, b, spec=SPEC, plan=GemmPlan(8, 8, 16), bm=8)
+    with pytest.raises(TypeError):
+        kops.fdp_gemm_nd(a, b, spec=SPEC, bk=16)
+    # the plan spelling still works and no deprecation chatter remains
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        kops.fdp_gemm(a, b, spec=SPEC, plan=GemmPlan(8, 8, 16))
 
 
-def test_plan_cache_info_shim_warns():
-    with pytest.warns(DeprecationWarning):
-        info = plan_cache_info()
-    assert set(info) == {"size", "hits", "misses", "autotuned",
-                         "persisted_loads"}
-    assert info == plan_cache_stats().as_dict()
+def test_plan_cache_info_shim_removed():
+    """The plan_cache_info() dict shim is gone; plan_cache_stats() is the
+    API."""
+    with pytest.raises(ImportError):
+        from repro.core.dispatch import plan_cache_info  # noqa: F401
+    stats = plan_cache_stats().as_dict()
+    assert set(stats) >= {"size", "hits", "misses", "autotuned",
+                          "persisted_loads"}
 
 
 def test_gemm_plan_fit_clamps():
