@@ -1,0 +1,214 @@
+#!/usr/bin/env python
+"""Observability gate: the serving drivers' ``--metrics-dump`` snapshot must
+prove the monitoring story end to end, in CI, on every PR.
+
+Two dump modes over a ``repro.obs.ServingMetricsDump`` document:
+
+  clean (default)     every monitored site classifies ``inside`` its
+                      calibration envelope with zero overflow events, the
+                      unified registry carries the monitor/plan-cache
+                      families, and the request accounting balances
+                      (submitted == routed + parked + rejected, fully
+                      drained).
+  --expect-violation  the named site — and only that site — classifies
+                      ``violated``, with at least one overflow event and a
+                      detail string that attributes it (the injected
+                      out-of-envelope dispatch was *detected and named*).
+
+``--trace trace.json`` additionally validates a ``--trace-out`` Chrome-trace
+export (well-formed complete events, serving request spans present).
+
+``--bench BENCH_serving.json --max-overhead 0.05`` gates the monitoring
+overhead row emitted by ``benchmarks/bench_serving.py``: steady-state
+monitored throughput must stay within 5% of the unmonitored pass.
+
+    PYTHONPATH=src python -m repro.serving --arch paper-mlp --reduced \
+        --requests 6 --metrics-dump obs.json --trace-out trace.json
+    python scripts/check_obs_snapshot.py obs.json --trace trace.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+INSIDE, NEAR_EDGE, VIOLATED, UNMONITORED = (
+    "inside", "near-edge", "violated", "no-envelope")
+
+REQUIRED_FAMILIES = ("repro_monitor_calls_total", "repro_envelope_status",
+                     "repro_plan_cache_ops_total")
+
+
+def _counter_total(metrics: dict, name: str) -> float:
+    fam = metrics.get("metrics", {}).get(name)
+    if fam is None:
+        return 0.0
+    return sum(s.get("value", 0.0) for s in fam.get("values", []))
+
+
+def check_dump(doc: dict, expect_violation: str | None) -> list:
+    errors = []
+    if doc.get("kind") != "repro.obs.ServingMetricsDump":
+        errors.append(f"dump kind {doc.get('kind')!r} != "
+                      "repro.obs.ServingMetricsDump")
+    metrics = doc.get("metrics") or {}
+    if metrics.get("kind") != "repro.obs.MetricsSnapshot":
+        errors.append("dump carries no registry snapshot under 'metrics'")
+    families = metrics.get("metrics", {})
+    for name in REQUIRED_FAMILIES:
+        if name not in families:
+            errors.append(f"registry family {name} missing from snapshot")
+    if "serving" in doc and "repro_serving_requests_total" not in families:
+        errors.append("serving dump without repro_serving_requests_total")
+    if _counter_total(metrics, "repro_monitor_calls_total") <= 0:
+        errors.append("monitor recorded no GEMM dispatches "
+                      "(repro_monitor_calls_total == 0)")
+
+    mon = doc.get("monitor")
+    if not mon:
+        errors.append("dump carries no monitor snapshot")
+        return errors
+    sites = mon.get("sites", {})
+    if not sites:
+        errors.append("monitor snapshot has no sites")
+    live = {s: info for s, info in sites.items() if info.get("live")}
+    if not live:
+        errors.append("no site saw live traffic")
+
+    if expect_violation is None:
+        if mon.get("worst_status") != INSIDE:
+            errors.append(f"worst_status {mon.get('worst_status')!r} != "
+                          f"{INSIDE!r} on clean traffic")
+        if mon.get("overflow_events", -1) != 0:
+            errors.append(f"{mon.get('overflow_events')} overflow events on "
+                          "clean traffic")
+        for s, info in sites.items():
+            if info.get("status") not in (INSIDE, UNMONITORED):
+                errors.append(f"site {s}: {info.get('status')} "
+                              f"({info.get('detail')})")
+        if not any(info.get("status") == INSIDE for info in live.values()):
+            errors.append("no live site classified against an envelope")
+    else:
+        bad = sites.get(expect_violation)
+        if bad is None:
+            errors.append(f"expected violated site {expect_violation!r} "
+                          "absent from monitor snapshot")
+        elif bad.get("status") != VIOLATED:
+            errors.append(f"site {expect_violation}: status "
+                          f"{bad.get('status')!r} != {VIOLATED!r}")
+        elif not bad.get("detail"):
+            errors.append(f"site {expect_violation}: violated without an "
+                          "attributing detail string")
+        if mon.get("worst_status") != VIOLATED:
+            errors.append("worst_status did not escalate to violated")
+        if mon.get("overflow_events", 0) < 1:
+            errors.append("violation detected without an overflow event")
+        for s, info in live.items():
+            if s != expect_violation and info.get("status") not in (
+                    INSIDE, UNMONITORED):
+                errors.append(f"collateral site {s}: {info.get('status')} "
+                              f"({info.get('detail')})")
+
+    serving = doc.get("serving")
+    if serving is not None:
+        total = (serving.get("routed", 0) + serving.get("parked", 0)
+                 + serving.get("rejected", 0))
+        if serving.get("submitted") != total:
+            errors.append(f"accounting broken: submitted="
+                          f"{serving.get('submitted')} != routed+parked+"
+                          f"rejected={total}")
+        if serving.get("parked"):
+            errors.append(f"{serving['parked']} request(s) still parked "
+                          "after the trace drained")
+        if serving.get("completed", 0) > serving.get("routed", 0):
+            errors.append("completed exceeds routed")
+    return errors
+
+
+def check_trace(path: str) -> list:
+    errors = []
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc.get("traceEvents", [])
+    if not events:
+        errors.append("trace has no events")
+    for ev in events:
+        if ev.get("ph") != "X" or ev.get("dur", -1) < 0 or \
+                ev.get("ts", -1) < 0:
+            errors.append(f"malformed trace event: {ev.get('name')}")
+            break
+    names = {ev.get("name") for ev in events}
+    for want in ("serving.request", "serving.run"):
+        if want not in names:
+            errors.append(f"no {want!r} span in the trace export")
+    return errors
+
+
+def check_bench(path: str, max_overhead: float) -> list:
+    errors = []
+    with open(path) as f:
+        doc = json.load(f)
+    rows = {r.get("name"): r for r in doc.get("rows", [])}
+    row = rows.get("serving_monitor_overhead")
+    if row is None:
+        return [f"{path}: no serving_monitor_overhead row — "
+                "bench_serving.py did not run the monitored pass"]
+    frac = row.get("overhead_frac")
+    if frac is None:
+        errors.append("overhead row carries no overhead_frac")
+    elif frac > max_overhead:
+        errors.append(
+            f"monitoring overhead {frac:.1%} > {max_overhead:.0%} budget "
+            f"({row.get('monitored_seconds_per_call'):.2e}s vs "
+            f"{row.get('baseline_seconds_per_call'):.2e}s per anchor GEMM)")
+    for key in ("worst_status", "probe_status"):
+        if row.get(key) not in (None, INSIDE):
+            errors.append(f"monitored bench pass left the envelope: "
+                          f"{key}={row.get(key)}")
+    if row.get("overflow_events"):
+        errors.append(f"{row['overflow_events']} overflow events during the "
+                      "monitored bench pass")
+    return errors
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("dump", nargs="?", default=None,
+                    help="ServingMetricsDump JSON (--metrics-dump output)")
+    ap.add_argument("--expect-violation", default=None, metavar="SITE",
+                    help="require SITE (and only SITE) to be violated")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="also validate a --trace-out Chrome-trace export")
+    ap.add_argument("--bench", default=None, metavar="PATH",
+                    help="gate the serving_monitor_overhead row in a "
+                         "bench_serving JSON")
+    ap.add_argument("--max-overhead", type=float, default=0.05,
+                    help="monitoring overhead budget for --bench "
+                         "(fraction, default 0.05)")
+    args = ap.parse_args(argv)
+    if args.dump is None and args.bench is None:
+        ap.error("nothing to check: pass a dump path and/or --bench")
+
+    errors = []
+    if args.dump:
+        with open(args.dump) as f:
+            doc = json.load(f)
+        errors += [f"{args.dump}: {e}"
+                   for e in check_dump(doc, args.expect_violation)]
+    if args.trace:
+        errors += [f"{args.trace}: {e}" for e in check_trace(args.trace)]
+    if args.bench:
+        errors += check_bench(args.bench, args.max_overhead)
+
+    if errors:
+        for e in errors:
+            print(f"[check_obs_snapshot] FAIL {e}")
+        sys.exit(1)
+    checked = [p for p in (args.dump, args.trace, args.bench) if p]
+    mode = (f"violation at {args.expect_violation}" if args.expect_violation
+            else "clean envelope")
+    print(f"[check_obs_snapshot] OK ({mode}): {', '.join(checked)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -134,6 +134,48 @@ def check_plan(path: str, manifest: dict, serve: bool = True) -> list:
                 errors.append(f"validation[{name!r}] mesh provenance "
                               f"{mesh!r} does not parse: {e}")
 
+    # 2b. calibration envelope: the runtime boundary the live monitor
+    # (repro.obs) checks traffic against. Every checked-in plan must carry
+    # one with a sane schema — a plan without an envelope is a plan whose
+    # claims can never be verified in production.
+    from repro.numerics import ENVELOPE_VERSION
+    env = plan.meta.get("envelope")
+    if not isinstance(env, dict) or not env.get("sites"):
+        errors.append("meta.envelope missing/empty — run "
+                      "scripts/refresh_plans.py --envelopes")
+    else:
+        if int(env.get("version", 0)) > ENVELOPE_VERSION:
+            errors.append(f"envelope version {env.get('version')} > "
+                          f"library {ENVELOPE_VERSION}")
+        want_fp = plan.meta.get("trace_fingerprint") or \
+            plan.meta.get("fingerprint")
+        if want_fp and env.get("trace_fingerprint") != want_fp:
+            errors.append(
+                f"envelope trace_fingerprint {env.get('trace_fingerprint')!r}"
+                f" does not match the plan's {want_fp!r}")
+        for site, e in env["sites"].items():
+            for rng_key in ("a_exp", "b_exp"):
+                rng = e.get(rng_key)
+                if (not isinstance(rng, list) or len(rng) != 2
+                        or not all(v is None or isinstance(v, int)
+                                   for v in rng)):
+                    errors.append(f"envelope[{site!r}].{rng_key} malformed: "
+                                  f"{rng!r}")
+            if not isinstance(e.get("msb"), int):
+                errors.append(f"envelope[{site!r}].msb malformed: "
+                              f"{e.get('msb')!r}")
+            if not (isinstance(e.get("calls"), int) and e["calls"] > 0):
+                errors.append(f"envelope[{site!r}].calls malformed: "
+                              f"{e.get('calls')!r}")
+            if not (isinstance(e.get("max_k"), int) and e["max_k"] >= 1):
+                errors.append(f"envelope[{site!r}].max_k malformed: "
+                              f"{e.get('max_k')!r}")
+        missing = [s.site for s in plan.gemm_sites()
+                   if s.site not in env["sites"]]
+        if missing:
+            errors.append(f"envelope covers no entry for searched GEMM "
+                          f"site(s) {missing} — re-derive from the trace")
+
     # 3. MANIFEST consistency
     entry = manifest.get("plans", {}).get(arch_id)
     if entry is None:
@@ -147,6 +189,9 @@ def check_plan(path: str, manifest: dict, serve: bool = True) -> list:
                 errors.append(f"MANIFEST {key} out of sync")
         if entry.get("budget_bits") != plan.budget_bits:
             errors.append("MANIFEST budget_bits out of sync")
+        n_env = len((plan.meta.get("envelope") or {}).get("sites", {}))
+        if entry.get("n_envelope_sites") != n_env:
+            errors.append("MANIFEST n_envelope_sites out of sync")
         from repro.workloads import validation_summary
         if entry.get("validation") != validation_summary(plan.meta):
             errors.append("MANIFEST validation scores out of sync "

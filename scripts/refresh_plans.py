@@ -42,6 +42,9 @@ Usage:
         --check     # recompute from the saved trace, compare to checked-in
     PYTHONPATH=src python scripts/refresh_plans.py --schedules
         # refresh the GemmPlan schedule zoo (examples/plans/schedules/)
+    PYTHONPATH=src python scripts/refresh_plans.py --envelopes
+        # derive meta["envelope"] for every checked-in plan from its saved
+        # trace (no recalibration, no search) — the live-monitor boundary
 """
 from __future__ import annotations
 
@@ -122,6 +125,50 @@ def refresh_schedules(args) -> None:
     print(f"[schedules] {len(zoo.entries)} schedules "
           f"({st.autotuned} autotuned) -> {path} "
           f"({time.time() - t0:.0f}s)")
+
+
+def refresh_envelopes(args) -> None:
+    """Back-fill ``meta["envelope"]`` on every checked-in plan from its saved
+    calibration trace — pure derivation (``numerics.build_envelope``), no
+    recalibration and no search, so site assignments, scores, and the trace
+    fingerprints are untouched. Fresh searches stamp the envelope themselves;
+    this path exists for the zoo that predates it."""
+    from repro.numerics import build_envelope, load_plan, load_trace
+
+    failures, done = 0, 0
+    only = set(args.only or ())
+    for fn in sorted(os.listdir(args.out)):
+        if not fn.endswith(".json") or fn == "MANIFEST.json":
+            continue
+        arch_id = fn[:-len(".json")]
+        if only and arch_id not in only:
+            continue
+        path = os.path.join(args.out, fn)
+        plan = load_plan(path)
+        trace_rel = plan.meta.get("trace")
+        if not trace_rel:
+            print(f"[{arch_id}] SKIP: plan records no trace path — "
+                  "recalibrate before deriving an envelope")
+            failures += 1
+            continue
+        try:
+            trace = load_trace(os.path.join(args.out, trace_rel),
+                               expect_fingerprint=plan.meta.get("fingerprint"))
+        except (OSError, ValueError) as e:
+            print(f"[{arch_id}] FAIL: {e}")
+            failures += 1
+            continue
+        plan.meta["envelope"] = build_envelope(trace, plan)
+        plan.save(path)
+        n = len(plan.meta["envelope"]["sites"])
+        print(f"[{arch_id}] envelope derived from {trace_rel} "
+              f"({n} gemm sites) -> {fn}")
+        done += 1
+    if not args.no_manifest:
+        rebuild_manifest(args.out)
+    print(f"[envelopes] {done} plan(s) updated, {failures} failure(s)")
+    if failures:
+        sys.exit(1)
 
 
 def _provenance() -> dict:
@@ -399,6 +446,9 @@ def manifest_entry(arch_id: str, plan) -> dict:
         "bytes_resident_vs_fp32": m.get("bytes_resident_vs_fp32"),
         "bytes_moved_vs_fp32": m.get("bytes_moved_vs_fp32"),
         "n_sites": len(plan.sites),
+        # live-monitor coverage: GEMM sites with a serialized calibration
+        # envelope (repro.obs compares live traffic against these bounds)
+        "n_envelope_sites": len((m.get("envelope") or {}).get("sites", {})),
         "n_bwd_sites": sum(s.phase == "bwd" for s in plan.sites),
         "n_aux_sites": sum(s.kind != "gemm" for s in plan.sites),
         "sites": [s.site for s in plan.sites],
@@ -488,10 +538,16 @@ def main(argv=None):
                     help="refresh the GemmPlan schedule zoo "
                          "(<out>/schedules/<backend>.json) instead of the "
                          "precision-plan sweep")
+    ap.add_argument("--envelopes", action="store_true",
+                    help="derive meta['envelope'] for checked-in plans from "
+                         "their saved traces (no recalibration/search)")
     args = ap.parse_args(argv)
     args.out = os.path.abspath(args.out)
     if args.schedules:
         refresh_schedules(args)
+        return
+    if args.envelopes:
+        refresh_envelopes(args)
         return
     bad = set(args.phases.split(",")) - {"fwd", "bwd"}
     if bad:

@@ -46,6 +46,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.registry import default_registry as _obs_registry
+
 from .accumulator import SAFE_CHUNK, AccumulatorSpec
 from .formats import BF16, FP32, FloatFormat, PositFormat, get_format
 
@@ -302,16 +304,52 @@ def _note_site(key: str) -> None:
 # separately from the forward pass. The hook runs at *trace* time, so it may
 # stage jnp ops / jax.debug.callback into the computation; it must be
 # None-checked here to keep the production path zero-cost.
-_TRACE_HOOK = None
+_TRACE_HOOK = None          # composed view over the slots below; None-checked
+_PRIMARY_HOOK = None        # the calibration slot (set_trace_hook)
+_EXTRA_HOOKS: list = []     # additive observers (repro.obs monitors)
+
+
+def _recompose_hooks() -> None:
+    global _TRACE_HOOK
+    hooks = ([_PRIMARY_HOOK] if _PRIMARY_HOOK is not None else []) \
+        + list(_EXTRA_HOOKS)
+    if not hooks:
+        _TRACE_HOOK = None
+    elif len(hooks) == 1:
+        _TRACE_HOOK = hooks[0]
+    else:
+        def _fanout(site_key, cfg, a, b, out, _hooks=tuple(hooks)):
+            for h in _hooks:
+                h(site_key, cfg, a, b, out)
+        _TRACE_HOOK = _fanout
 
 
 def set_trace_hook(hook):
-    """Install (or clear, with None) the calibration hook. Returns the
-    previously installed hook so callers can restore it."""
-    global _TRACE_HOOK
-    prev = _TRACE_HOOK
-    _TRACE_HOOK = hook
+    """Install (or clear, with None) the *primary* calibration hook. Returns
+    the previously installed primary hook so callers can restore it. Extra
+    hooks installed via ``add_trace_hook`` (live monitors) are a separate
+    channel and keep firing across set/restore pairs."""
+    global _PRIMARY_HOOK
+    prev = _PRIMARY_HOOK
+    _PRIMARY_HOOK = hook
+    _recompose_hooks()
     return prev
+
+
+def add_trace_hook(hook):
+    """Install an *additional* trace hook alongside the calibration slot —
+    the seam ``repro.obs.monitor`` uses, so production monitoring and a
+    concurrent ``calibrate()`` co-exist. Returns a zero-arg remover."""
+    _EXTRA_HOOKS.append(hook)
+    _recompose_hooks()
+
+    def _remove():
+        try:
+            _EXTRA_HOOKS.remove(hook)
+        except ValueError:
+            pass
+        _recompose_hooks()
+    return _remove
 
 
 def _maybe_trace(site_key, cfg, a, b, out):
@@ -361,6 +399,11 @@ class PlanCacheStats:
     ``persisted_loads`` counts entries installed from a ScheduleZoo file —
     a warm process serving entirely out of a checked-in zoo shows
     ``misses == 0`` and ``persisted_loads > 0``.
+
+    .. deprecated:: the counters now live in the unified obs registry
+       (``repro_plan_cache_ops_total{op=...}`` / ``repro_plan_cache_size``);
+       this class and :func:`plan_cache_stats` are thin views kept for one
+       release — read ``repro.obs.default_registry().snapshot()`` instead.
     """
 
     size: int
@@ -375,7 +418,19 @@ class PlanCacheStats:
 
 _PLAN_CACHE: dict = {}
 _PLAN_LOCK = threading.Lock()
-_PLAN_STATS = {"hits": 0, "misses": 0, "autotuned": 0, "persisted_loads": 0}
+
+# Plan-cache counters are registry-backed (repro.obs is stdlib-only at this
+# layer): one source of truth for hits/misses/autotunes across the legacy
+# stats() views and the Prometheus/JSON exposition.
+_PLAN_OPS = _obs_registry().counter(
+    "repro_plan_cache_ops_total",
+    "GemmPlan cache operations (hit/miss/autotuned/persisted_load)", ("op",))
+_PLAN_SIZE = _obs_registry().gauge(
+    "repro_plan_cache_size", "resident GemmPlan cache entries")
+
+
+def _plan_stats_inc(op: str, n: int = 1) -> None:
+    _PLAN_OPS.inc(n, op=op)
 
 # Candidate tiles for the measured path (clamped to the problem size).
 AUTOTUNE_CANDIDATES = (
@@ -421,20 +476,22 @@ def plan_gemm(m: int, n: int, k: int, *, fmt, spec: AccumulatorSpec,
         cached = _PLAN_CACHE.get(key)
     if cached is not None and (
             not autotune or cached.source in ("measured", "override")):
-        with _PLAN_LOCK:
-            _PLAN_STATS["hits"] += 1
+        _plan_stats_inc("hits")
         return cached
     if autotune:
         plan = _measure_plan(m, n, k, fmt=fmt, spec=spec)
+        _plan_stats_inc("autotuned")
+        _plan_stats_inc("misses")
         with _PLAN_LOCK:
-            _PLAN_STATS["autotuned"] += 1
-            _PLAN_STATS["misses"] += 1
             _PLAN_CACHE[key] = plan
+            _PLAN_SIZE.set(len(_PLAN_CACHE))
         return plan
     plan = _heuristic_plan(batch, m, n, k)
+    _plan_stats_inc("misses")
     with _PLAN_LOCK:
-        _PLAN_STATS["misses"] += 1
-        return _PLAN_CACHE.setdefault(key, plan)
+        plan = _PLAN_CACHE.setdefault(key, plan)
+        _PLAN_SIZE.set(len(_PLAN_CACHE))
+        return plan
 
 
 def register_plan(m: int, n: int, k: int, plan: GemmPlan, *, fmt,
@@ -445,18 +502,27 @@ def register_plan(m: int, n: int, k: int, plan: GemmPlan, *, fmt,
     key = _plan_key(batch, m, n, k, fmt, spec, backend)
     with _PLAN_LOCK:
         _PLAN_CACHE[key] = dataclasses.replace(plan, source="override")
+        _PLAN_SIZE.set(len(_PLAN_CACHE))
 
 
 def plan_cache_stats() -> PlanCacheStats:
+    """Deprecated thin view over the obs-registry plan-cache counters (see
+    ``PlanCacheStats``); kept so existing callers/tests read unchanged."""
     with _PLAN_LOCK:
-        return PlanCacheStats(size=len(_PLAN_CACHE), **_PLAN_STATS)
+        size = len(_PLAN_CACHE)
+    return PlanCacheStats(
+        size=size,
+        hits=int(_PLAN_OPS.value(op="hits")),
+        misses=int(_PLAN_OPS.value(op="misses")),
+        autotuned=int(_PLAN_OPS.value(op="autotuned")),
+        persisted_loads=int(_PLAN_OPS.value(op="persisted_loads")))
 
 
 def clear_plan_cache() -> None:
     with _PLAN_LOCK:
         _PLAN_CACHE.clear()
-        for k in _PLAN_STATS:
-            _PLAN_STATS[k] = 0
+        _PLAN_SIZE.set(0)
+    _PLAN_OPS.clear()
 
 
 # Candidate timing discipline (shared with benchmarks/bench_gemm.py and the

@@ -99,7 +99,9 @@ class ScheduleZoo:
                 dispatch._PLAN_CACHE[key] = dataclasses.replace(
                     plan, source=source)
                 installed += 1
-            dispatch._PLAN_STATS["persisted_loads"] += installed
+            dispatch._PLAN_SIZE.set(len(dispatch._PLAN_CACHE))
+        if installed:
+            dispatch._plan_stats_inc("persisted_loads", installed)
         return installed
 
     def save(self, path) -> None:

@@ -164,7 +164,11 @@ class ContinuousBatcher:
     def stats(self):
         """Typed ``PlanCacheStats`` for the process-global GemmPlan cache —
         the serving-health counters (a warm engine over a preloaded schedule
-        zoo shows ``misses == 0``, ``persisted_loads > 0``)."""
+        zoo shows ``misses == 0``, ``persisted_loads > 0``).
+
+        .. deprecated:: a view over the ``repro.obs`` registry
+           (``repro_plan_cache_ops_total`` / ``repro_plan_cache_size``);
+           scrape the registry for monitoring."""
         from repro.core import dispatch
         return dispatch.plan_cache_stats()
 
@@ -252,16 +256,23 @@ class ContinuousBatcher:
         Raises ``CacheExhausted`` when the queue is non-empty but nothing can
         ever be admitted (the global cursor has outrun the cache) — loud
         refusal instead of the old silent truncation."""
-        for _ in range(max_steps):
-            if not self.step():
-                if self.queue:
-                    head = self.queue[0]
-                    raise CacheExhausted(
-                        f"{len(self.queue)} queued request(s) can no longer "
-                        f"fit: head needs {len(head.prompt) + head.max_new} "
-                        f"positions, cache_remaining()="
-                        f"{self.cache_remaining()} of max_len={self.max_len}")
-                break
+        from repro.obs.spans import span
+        with span("serving.batcher_run", n_slots=self.n_slots,
+                  max_len=self.max_len) as sp:
+            steps = 0
+            for _ in range(max_steps):
+                if not self.step():
+                    if self.queue:
+                        head = self.queue[0]
+                        raise CacheExhausted(
+                            f"{len(self.queue)} queued request(s) can no "
+                            f"longer fit: head needs "
+                            f"{len(head.prompt) + head.max_new} positions, "
+                            f"cache_remaining()={self.cache_remaining()} "
+                            f"of max_len={self.max_len}")
+                    break
+                steps += 1
+            sp.annotate(steps=steps)
 
 
 def serve_requests(cfg, params, requests: list[Request], n_slots: int = 4,

@@ -82,6 +82,20 @@ def main(argv=None):
     ap.add_argument("--buckets", default=None,
                     help="slots x len bucket table for --engine routed, "
                          "e.g. 2x32,4x64 (default: one bucket sized to fit)")
+    ap.add_argument("--monitor", action="store_true",
+                    help="serve under live calibration-envelope monitors "
+                         "(envelope from --precision-plan or the zoo plan)")
+    ap.add_argument("--metrics-dump", default=None, metavar="PATH",
+                    help="write the unified metrics registry (+ monitor "
+                         "snapshot) as JSON when serving finishes")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="expose /metrics (Prometheus text) and "
+                         "/metrics.json on this local port while serving")
+    ap.add_argument("--metrics-hold", type=float, default=0.0,
+                    help="keep the --metrics-port server up this many "
+                         "seconds after serving completes")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export the span timeline as Chrome-trace JSON")
     args = ap.parse_args(argv)
 
     from repro.core.schedules import preload_schedules
@@ -113,7 +127,37 @@ def main(argv=None):
         params = jax.device_put(
             params, shd.param_shardings(cfg, params, mesh,
                                         profile=args.profile))
+    srv = None
+    if args.metrics_port is not None:
+        from repro.obs import start_metrics_server
+        srv = start_metrics_server(args.metrics_port)
+        print(f"[serve] metrics at http://127.0.0.1:{srv.server_port}"
+              f"/metrics (+ /metrics.json)")
+
+    mon_ctx = contextlib.nullcontext(None)
+    if args.monitor or args.metrics_dump:
+        from repro.obs import monitoring
+        envelope = None
+        if args.precision_plan:
+            from repro.numerics import load_plan
+            envelope = (load_plan(args.precision_plan).meta
+                        or {}).get("envelope")
+        elif args.engine == "routed":
+            import json as _json
+            with open(os.path.join(args.plans, "MANIFEST.json")) as f:
+                manifest = _json.load(f)
+            for key, entry in sorted(manifest.get("plans", {}).items()):
+                if base_arch in (key, entry.get("arch")):
+                    from repro.numerics import load_plan
+                    envelope = (load_plan(os.path.join(
+                        args.plans, entry.get("file", f"{key}.json"))).meta
+                        or {}).get("envelope")
+                    break
+        mon_ctx = monitoring(envelope=envelope)
+
     t0 = time.time()
+    stack = contextlib.ExitStack()
+    mon = stack.enter_context(mon_ctx)
     if args.engine == "routed":
         from repro.serving import (BucketedEnginePool, PlanRouter,
                                    RoutedFrontend, ServeRequest)
@@ -167,12 +211,36 @@ def main(argv=None):
             else contextlib.nullcontext()
         with ctx:
             toks = serve(cfg, params, prompts, args.gen, dist=dist)
+    stack.close()                      # uninstall monitors, land callbacks
     dt = time.time() - t0
     plan_note = f" plan={args.precision_plan}" if args.precision_plan else ""
     print(f"[serve] {args.arch}: engine={args.engine} batch={args.batch} "
           f"prompt={args.prompt_len} gen={args.gen} in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s){plan_note}")
     print("sample:", toks[0].tolist())
+    if mon is not None:
+        print(f"[serve] monitor: worst={mon.worst_status()} over "
+              f"{len(mon.statuses())} sites, "
+              f"overflow_events={mon.overflow_events()}")
+    if args.metrics_dump:
+        import json as _json
+
+        from repro.obs import default_registry
+        dump = {"kind": "repro.obs.ServingMetricsDump", "version": 1,
+                "arch": args.arch, "engine": args.engine,
+                "metrics": default_registry().snapshot(),
+                "monitor": mon.snapshot() if mon is not None else None}
+        with open(args.metrics_dump, "w") as f:
+            _json.dump(dump, f, indent=1, sort_keys=True, default=str)
+        print(f"[serve] metrics dump -> {args.metrics_dump}")
+    if args.trace_out:
+        from repro.obs import save_chrome_trace
+        n_ev = save_chrome_trace(args.trace_out)
+        print(f"[serve] chrome trace ({n_ev} events) -> {args.trace_out}")
+    if srv is not None:
+        if args.metrics_hold > 0:
+            time.sleep(args.metrics_hold)
+        srv.shutdown()
 
 
 if __name__ == "__main__":

@@ -13,7 +13,8 @@
 #                assignment meeting an end-to-end error budget
 #   plan       - serializable PrecisionPlan (JSON, versioned) that loads into
 #                a NumericsPolicy with per-site overrides (--precision-plan)
-from .trace import (TRACE_VERSION, CalibrationTrace, SiteProfile, calibrate,
+from .trace import (ENVELOPE_VERSION, TRACE_VERSION, CalibrationTrace,
+                    SiteProfile, build_envelope, calibrate, cfg_capacity,
                     config_fingerprint, load_trace)
 from .candidates import (Candidate, QuantCandidate, enumerate_candidates,
                          enumerate_quant_candidates)
@@ -22,8 +23,9 @@ from .search import (Evaluated, SearchResult, evaluate_candidates,
 from .plan import (PLAN_VERSION, PrecisionPlan, SitePlan, load_plan)
 
 __all__ = [
-    "TRACE_VERSION", "CalibrationTrace", "SiteProfile", "calibrate",
-    "config_fingerprint", "load_trace",
+    "ENVELOPE_VERSION", "TRACE_VERSION", "CalibrationTrace", "SiteProfile",
+    "build_envelope", "calibrate", "cfg_capacity", "config_fingerprint",
+    "load_trace",
     "Candidate", "QuantCandidate", "enumerate_candidates",
     "enumerate_quant_candidates", "evaluate_quant_candidates",
     "Evaluated", "SearchResult", "evaluate_candidates", "pareto_frontier",

@@ -35,7 +35,7 @@ from .candidates import (DEFAULT_FORMATS, DEFAULT_WIDTHS, Candidate,
                          QuantCandidate, enumerate_candidates,
                          enumerate_quant_candidates)
 from .plan import PrecisionPlan, SitePlan
-from .trace import CalibrationTrace, SiteProfile
+from .trace import CalibrationTrace, SiteProfile, build_envelope
 
 ERROR_CAP_BITS = 24.0          # f32 read-out: "exact" caps at full mantissa
 
@@ -370,6 +370,9 @@ def search(trace: CalibrationTrace, budget_bits: float, *,
     if getattr(trace, "fingerprint", None):
         # provenance: which persisted calibration this plan was searched from
         plan.meta["trace_fingerprint"] = trace.fingerprint
+    # the runtime-checkable boundary of this plan's claims: traced per-site
+    # exponent ranges + the deployed capacity, for the live envelope monitor
+    plan.meta["envelope"] = build_envelope(trace, plan)
     return SearchResult(plan, decisions, validated, reports=reports)
 
 

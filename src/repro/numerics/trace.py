@@ -439,6 +439,75 @@ def load_trace(path, *, expect_fingerprint: Optional[str] = None
     return CalibrationTrace.load(path, expect_fingerprint=expect_fingerprint)
 
 
+# ---------------------------------------------------------------------------
+# Calibration envelope: the runtime-checkable boundary of a plan's claims
+# ---------------------------------------------------------------------------
+ENVELOPE_VERSION = 1
+
+
+def _fmt_emax(fmt) -> int:
+    """Max representable exponent of a storage format — the overflow
+    capacity a *native* (accumulator-less) site actually has."""
+    e = getattr(fmt, "emax", None)
+    if e is not None:
+        return int(e)
+    nbits, es = getattr(fmt, "nbits", None), getattr(fmt, "es", 0)
+    if nbits is not None:                       # posit maxpos = 2^((n-2)*2^es)
+        return (int(nbits) - 2) * (1 << int(es))
+    return 127
+
+
+def cfg_capacity(cfg) -> tuple:
+    """(msb, lsb) magnitude capacity of a site's deployed datapath: the
+    fixed-point accumulator's bounds when one is configured (beyond msb a
+    wrap-mode Kulisch register silently wraps), else the format's exponent
+    reach with no lsb floor. This — not the traced operand range — is the
+    hard line the live monitor calls ``violated``."""
+    acc = getattr(cfg, "acc", None)
+    if acc is not None:
+        return int(acc.msb), int(acc.lsb)
+    return _fmt_emax(cfg.fmt), None
+
+
+def build_envelope(trace: CalibrationTrace, plan_or_policy) -> dict:
+    """Serialize the calibration envelope a deployed plan's claims hold
+    within: per GEMM site, the traced operand exponent ranges + sample count
+    (the soft boundary — leaving it means the offline validation no longer
+    speaks for this traffic) and the deployed ⟨msb,lsb⟩ capacity (the hard
+    boundary — exceeding msb wraps the accumulator). Stored in
+    ``PrecisionPlan.meta["envelope"]`` and compared against live folds by
+    ``repro.obs.monitor.NumericsMonitor``.
+    """
+    policy = (plan_or_policy.to_policy()
+              if hasattr(plan_or_policy, "to_policy") else plan_or_policy)
+    sites = {}
+    for site, p in sorted(trace.profiles().items()):
+        if qformat.site_kind(site) != "gemm":
+            continue
+        cfg = policy.lookup(site)
+        msb_cap, lsb_cap = cfg_capacity(cfg)
+        sites[site] = {
+            "a_exp": [p.a_exp_min, p.a_exp_max],
+            "b_exp": [p.b_exp_min, p.b_exp_max],
+            "out_exp": [_floor_log2(p.out_abs_min_nz),
+                        _floor_log2(p.out_abs_max)],
+            "msb": msb_cap,
+            "lsb": lsb_cap,
+            "msb_traced": p.msb_required,
+            "lsb_exact": p.lsb_exact(cfg.fmt.precision),
+            "calls": p.calls,
+            "max_k": p.max_k,
+        }
+    meta = trace.meta or {}
+    tokens = None
+    if meta.get("batch") and meta.get("seq"):
+        tokens = int(meta["batch"]) * int(meta["seq"])
+    return {"version": ENVELOPE_VERSION,
+            "trace_fingerprint": trace.fingerprint,
+            "traced_tokens": tokens,
+            "sites": sites}
+
+
 def _as_float(fmt, x):
     """Stats domain: posit carriers decode to their float values."""
     if isinstance(fmt, PositFormat):

@@ -16,6 +16,8 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import warnings
+from functools import partial
 from typing import Optional
 
 import jax
@@ -25,43 +27,75 @@ from repro.core import accumulator as acc
 from repro.core import qformat
 from repro.core.accumulator import AccumulatorSpec
 from repro.core.qformat import QuantConfig
+from repro.obs.registry import default_registry as _obs_registry
 from repro.parallel.compat import axis_size
 
-_VALIDATE_OVERFLOW = False
+_VALIDATE_OVERFLOW: Optional[str] = None     # None | "raise" | "warn"
+
+# Saturation events land in the unified obs registry under the same family
+# the GEMM envelope monitor uses, so "zero overflow events" is one number
+# across accumulator wraps and collective spillover.
+_OVERFLOW_EVENTS = _obs_registry().counter(
+    "repro_overflow_events_total",
+    "overflow/saturation events (accumulator wrap risk, non-finite "
+    "outputs, quantized-collective spillover)", ("site", "source"))
+_WARNED_SITES: set = set()
 
 
 @contextlib.contextmanager
-def validate_overflow(enabled: bool = True):
-    """Debug/validation mode: a quantized collective payload that would
-    saturate ``spec.width`` raises OverflowError instead of silently clipping
-    (clipping breaks the 'same bits as single device' contract)."""
+def validate_overflow(enabled: bool = True, *, mode: str = "raise"):
+    """Validation mode: a quantized collective payload that would saturate
+    its grid width is detected instead of silently clipping (clipping breaks
+    the 'same bits as single device' contract).
+
+    ``mode="raise"`` (default) raises ``OverflowError`` naming the offending
+    site; ``mode="warn"`` is for monitoring-only production deployments —
+    events still increment ``repro_overflow_events_total{source=collective}``
+    and emit one ``RuntimeWarning`` per site, but serving keeps running.
+    The mode is captured when a computation is *traced* (it is staged into
+    the debug callback), like the check itself.
+    """
+    if mode not in ("raise", "warn"):
+        raise ValueError(f"validate_overflow mode {mode!r} "
+                         "(expected 'raise' or 'warn')")
     global _VALIDATE_OVERFLOW
     prev = _VALIDATE_OVERFLOW
-    _VALIDATE_OVERFLOW = enabled
+    _VALIDATE_OVERFLOW = mode if enabled else None
     try:
         yield
     finally:
         _VALIDATE_OVERFLOW = prev
 
 
-def _raise_on_saturation(saturated) -> None:
-    if saturated:
-        raise OverflowError(
-            "quantized collective payload saturates spec.width — the clipped "
-            "reduction would not match single-device bits; widen the spec "
-            "(ovf/msb) or rescale the payload")
+def _on_saturation(site: str, mode: str, saturated) -> None:
+    if not saturated:
+        return
+    _OVERFLOW_EVENTS.inc(site=site, source="collective")
+    msg = (f"[{site}] quantized collective payload saturates the grid "
+           "width — the clipped reduction would not match single-device "
+           "bits; widen the spec (ovf/msb) or rescale the payload")
+    if mode == "warn":
+        if site not in _WARNED_SITES:      # counter has the event count;
+            _WARNED_SITES.add(site)        # warn once per site, not per step
+            warnings.warn(msg, RuntimeWarning)
+        return
+    raise OverflowError(msg)
 
 
-def _check_overflow(y: jax.Array, lim: float) -> None:
-    """Under ``validate_overflow()``: raise if |y| exceeds the signed range.
-    Works both eagerly and under trace (via debug.callback)."""
-    if not _VALIDATE_OVERFLOW:
+def _check_overflow(y: jax.Array, lim: float,
+                    site: str = "collective") -> None:
+    """Under ``validate_overflow()``: flag any |y| exceeding the signed
+    range, attributed to ``site``. Works both eagerly and under trace (via
+    debug.callback)."""
+    mode = _VALIDATE_OVERFLOW
+    if mode is None:
         return
     saturated = jnp.any(jnp.abs(y) > lim)
-    jax.debug.callback(_raise_on_saturation, saturated)
+    jax.debug.callback(partial(_on_saturation, site, mode), saturated)
 
 
-def _grid_quantize(x: jax.Array, lsb: int, width: int, stochastic_key=None):
+def _grid_quantize(x: jax.Array, lsb: int, width: int, stochastic_key=None,
+                   site: str = "grid_quantize"):
     """Round-to-nearest onto 2^lsb grid, clip to signed ``width`` bits."""
     scale = 2.0 ** lsb
     y = x.astype(jnp.float32) / scale
@@ -70,7 +104,7 @@ def _grid_quantize(x: jax.Array, lsb: int, width: int, stochastic_key=None):
     else:
         y = jnp.round(y)
     lim = 2.0 ** (width - 1) - 1
-    _check_overflow(y, lim)
+    _check_overflow(y, lim, site)
     return jnp.clip(y, -lim, lim).astype(jnp.int32)
 
 
@@ -78,9 +112,9 @@ def _grid_dequantize(q: jax.Array, lsb: int, dtype=jnp.float32):
     return (q.astype(jnp.float32) * 2.0 ** lsb).astype(dtype)
 
 
-def quantize_tree(tree, spec: AccumulatorSpec):
+def quantize_tree(tree, spec: AccumulatorSpec, site: str = "quantize_tree"):
     return jax.tree.map(
-        lambda x: _grid_quantize(x, spec.lsb, spec.width), tree)
+        lambda x: _grid_quantize(x, spec.lsb, spec.width, site=site), tree)
 
 
 def dequantize_tree(tree, spec: AccumulatorSpec, like=None):
@@ -99,7 +133,8 @@ def reproducible_psum(x: jax.Array, axis_name: str, spec: AccumulatorSpec,
     int32; the width bound documents the *information* content — a production
     deployment would pack to int16/int8 wire format, which this emulates).
     """
-    q = _grid_quantize(x, spec.lsb, spec.width)
+    q = _grid_quantize(x, spec.lsb, spec.width,
+                       site="reproducible_psum@coll")
     s = jax.lax.psum(q, axis_name)
     out = _grid_dequantize(s, spec.lsb, x.dtype)
     if mean:
@@ -134,7 +169,8 @@ def fdp_psum(limbs: jax.Array, axis_name, spec: AccumulatorSpec) -> jax.Array:
 
 
 def quantized_psum(x: jax.Array, axis_name: str, cfg: QuantConfig, *,
-                   mean: bool = False, residual: Optional[jax.Array] = None):
+                   mean: bool = False, residual: Optional[jax.Array] = None,
+                   site: str = qformat.GRAD_PSUM_SITE.key):
     """Block-scaled low-bit all-reduce — the bytes-*moved* counterpart to the
     optimizer's bytes-resident site (``CollectiveSite("grad_psum")``).
 
@@ -175,7 +211,7 @@ def quantized_psum(x: jax.Array, axis_name: str, cfg: QuantConfig, *,
         payload = payload + qformat._to_blocks(residual, cfg.block)
     y = jnp.round(payload / scale[:, None])
     lim = 2.0 ** (cfg.bits - 1) - 1
-    _check_overflow(y, lim)
+    _check_overflow(y, lim, site)
     q = jnp.clip(y, -lim, lim).astype(jnp.int32)
     s = jax.lax.psum(q, axis_name)
 
@@ -235,7 +271,8 @@ class CompressedGradReducer:
         """Returns (reduced_grads, new_residual)."""
         def one(g, r):
             g32 = g.astype(jnp.float32) + r
-            q = _grid_quantize(g32, self.spec.lsb, self.spec.width)
+            q = _grid_quantize(g32, self.spec.lsb, self.spec.width,
+                               site=qformat.GRAD_PSUM_SITE.key)
             sent = _grid_dequantize(q, self.spec.lsb)
             new_r = g32 - sent
             red = jax.lax.psum(q, self.axis_name)

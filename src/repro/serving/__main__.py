@@ -12,11 +12,20 @@ engine pool's compile/eviction/bucket-hit bookkeeping.
 
 ``--require-complete`` exits nonzero if any request failed or was rejected
 (the CI gate mode).
+
+Observability flags: ``--monitor`` serves under live calibration-envelope
+monitors (the base zoo plan's envelope), ``--metrics-dump out.json`` writes
+the unified registry + monitor + request-accounting snapshot (implies
+``--monitor``), ``--inject-violation SITE`` fires one deliberately
+out-of-envelope GEMM at the named plan site after the trace drains (the CI
+check that a violation is *detected and named*), ``--trace-out trace.json``
+exports the span timeline as Chrome-trace JSON.
 """
 
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import sys
 
@@ -68,6 +77,16 @@ def main(argv=None):
                     help="also dump the stats dict to this path")
     ap.add_argument("--require-complete", action="store_true",
                     help="exit 1 unless every request completed (CI gate)")
+    ap.add_argument("--monitor", action="store_true",
+                    help="serve under live calibration-envelope monitors")
+    ap.add_argument("--metrics-dump", default=None, metavar="PATH",
+                    help="write registry+monitor+serving snapshot JSON "
+                         "(implies --monitor)")
+    ap.add_argument("--inject-violation", default=None, metavar="SITE",
+                    help="after serving, dispatch one out-of-envelope GEMM "
+                         "at SITE (implies --monitor)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export span timeline as Chrome-trace JSON")
     args = ap.parse_args(argv)
 
     import os
@@ -81,18 +100,38 @@ def main(argv=None):
     if args.reduced:
         cfg = cfg.reduced()
     params = init(cfg, jax.random.key(args.seed))
-    pool = BucketedEnginePool(cfg, params, parse_buckets(args.buckets),
-                              max_live=args.max_engines)
-    front = RoutedFrontend(pool, router, max_live_batches=args.max_live)
 
-    streamed: list = []
-    reqs = build_trace(jax.random.key(args.seed + 1), cfg.vocab_size,
-                       args.requests, args.max_new)
-    for r in reqs:
-        if r.method == "stream":
-            r.on_token = streamed.append
-    comps = [front.submit(r) for r in reqs]
-    front.run()
+    monitor_on = bool(args.monitor or args.metrics_dump
+                      or args.inject_violation)
+    mon_ctx, plan_doc = contextlib.nullcontext(None), None
+    if monitor_on:
+        from repro.numerics import load_plan
+        from repro.obs import monitoring
+        base = next((p for p in router.plans
+                     if p.derived is None and p.path), None)
+        if base is None:
+            print("[repro.serving] no zoo plan with a document on disk — "
+                  "cannot monitor", file=sys.stderr)
+            sys.exit(2)
+        plan_doc = load_plan(base.path)
+        mon_ctx = monitoring(plan_doc)
+
+    with mon_ctx as mon:
+        pool = BucketedEnginePool(cfg, params, parse_buckets(args.buckets),
+                                  max_live=args.max_engines)
+        front = RoutedFrontend(pool, router, max_live_batches=args.max_live)
+
+        streamed: list = []
+        reqs = build_trace(jax.random.key(args.seed + 1), cfg.vocab_size,
+                           args.requests, args.max_new)
+        for r in reqs:
+            if r.method == "stream":
+                r.on_token = streamed.append
+        comps = [front.submit(r) for r in reqs]
+        front.run()
+
+        if args.inject_violation:
+            _inject_violation(args.inject_violation, plan_doc)
 
     stats = front.stats()
     print(f"[repro.serving] {cfg.name}: {len(reqs)} requests, "
@@ -113,6 +152,11 @@ def main(argv=None):
           f"autotuned={ps['autotuned']} persisted={ps['persisted_loads']}")
     if streamed:
         print(f"  streamed uid=1: {streamed}")
+    if mon is not None:
+        worst = mon.worst_status()
+        n_sites = len(mon.statuses())
+        print(f"  monitor: worst={worst} over {n_sites} sites, "
+              f"overflow_events={mon.overflow_events()}")
 
     failures = [c for c in comps if not c.ok]
     for c in failures:
@@ -121,8 +165,40 @@ def main(argv=None):
     if args.json:
         with open(args.json, "w") as f:
             json.dump(stats, f, indent=1, sort_keys=True, default=str)
+    if args.metrics_dump:
+        from repro.obs.registry import default_registry
+        dump = {
+            "kind": "repro.obs.ServingMetricsDump",
+            "version": 1,
+            "arch": cfg.name,
+            "metrics": default_registry().snapshot(),
+            "monitor": mon.snapshot() if mon is not None else None,
+            "serving": front.metrics(),
+        }
+        with open(args.metrics_dump, "w") as f:
+            json.dump(dump, f, indent=1, sort_keys=True, default=str)
+        print(f"  metrics dump -> {args.metrics_dump}")
+    if args.trace_out:
+        from repro.obs.export import save_chrome_trace
+        n_ev = save_chrome_trace(args.trace_out)
+        print(f"  chrome trace ({n_ev} events) -> {args.trace_out}")
     if args.require_complete and failures:
         sys.exit(1)
+
+
+def _inject_violation(site: str, plan_doc) -> None:
+    """One deliberately out-of-envelope dispatch at ``site`` under the
+    deployed plan's policy: operands at ~2^70 push the product past every
+    traced exponent range (and past f32 overflow → a non-finite event), so
+    the monitor must flip exactly this site to ``violated``."""
+    import jax.numpy as jnp
+
+    from repro.core import dispatch
+    out = dispatch.gemm(jnp.full((8, 16), 2.0 ** 70, jnp.float32),
+                        jnp.full((16, 8), 2.0 ** 70, jnp.float32),
+                        site=site, policy=plan_doc.to_policy())
+    jax.block_until_ready(out)
+    print(f"  injected out-of-envelope dispatch at site {site!r}")
 
 
 if __name__ == "__main__":

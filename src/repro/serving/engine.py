@@ -34,6 +34,8 @@ import numpy as np
 from repro.core.dispatch import NumericsPolicy, use_policy
 from repro.launch.batching import ContinuousBatcher, Request
 from repro.models import forward
+from repro.obs.registry import default_registry
+from repro.obs.spans import span
 
 METHODS = ("score", "generate", "stream")
 
@@ -191,6 +193,13 @@ class BucketedEnginePool:
         self._engines: OrderedDict = OrderedDict()
         self._stats = {"compiles": 0, "hits": 0, "evictions": 0}
         self._bucket_hits: dict = {b.label: 0 for b in self.buckets}
+        # process-wide mirror of the per-instance counters (the dicts above
+        # stay this pool's exact source of truth)
+        self._m_ops = default_registry().counter(
+            "repro_engine_pool_ops_total",
+            "bucketed engine pool events", ("op",))
+        self._m_resident = default_registry().gauge(
+            "repro_engine_pool_resident", "engines resident in the pool")
 
     def bucket_for(self, prompt_len: int, max_new: int) -> Bucket:
         """Smallest bucket whose capacity fits ``prompt + max_new`` (padded
@@ -216,17 +225,22 @@ class BucketedEnginePool:
         if eng is not None:
             self._engines.move_to_end(key)
             self._stats["hits"] += 1
+            self._m_ops.inc(op="hits")
             self._bucket_hits[bucket.label] += 1
             return eng
         self._evict_idle()
         policy = plan.policy()
-        if method == "score":
-            eng = ScoreEngine(self.cfg, self.params, bucket, policy)
-        else:
-            eng = GenerateEngine(self.cfg, self.params, bucket, policy,
-                                 method, eos_id=self.eos_id)
+        with span("serving.aot_compile", plan=plan.name, bucket=bucket.label,
+                  method=method):
+            if method == "score":
+                eng = ScoreEngine(self.cfg, self.params, bucket, policy)
+            else:
+                eng = GenerateEngine(self.cfg, self.params, bucket, policy,
+                                     method, eos_id=self.eos_id)
         self._engines[key] = eng
         self._stats["compiles"] += 1
+        self._m_ops.inc(op="compiles")
+        self._m_resident.set(float(len(self._engines)))
         self._bucket_hits[bucket.label] += 1
         return eng
 
@@ -239,11 +253,20 @@ class BucketedEnginePool:
                 return                       # everything is mid-generation
             del self._engines[victim]
             self._stats["evictions"] += 1
+            self._m_ops.inc(op="evictions")
+            self._m_resident.set(float(len(self._engines)))
 
     def live(self) -> dict:
         return dict(self._engines)
 
     def stats(self) -> dict:
+        """Per-instance pool bookkeeping (exact counts for this pool).
+
+        .. deprecated:: the process-wide scrape surface is the ``repro.obs``
+           registry (``repro_engine_pool_ops_total`` /
+           ``repro_engine_pool_resident``); this dict remains the exact
+           per-instance view.
+        """
         from repro.core.dispatch import plan_cache_stats
         total = sum(self._bucket_hits.values())
         return {**self._stats, "resident": len(self._engines),

@@ -25,6 +25,8 @@ from collections import Counter, OrderedDict, deque
 from typing import Callable, Optional
 
 from repro.launch.batching import Request
+from repro.obs.registry import default_registry
+from repro.obs.spans import plan_energy_per_token, span, start_span
 from .engine import AdmissionError, BucketedEnginePool, GenerateEngine
 from .router import PlanRouter, RoutingError
 
@@ -61,6 +63,7 @@ class Completion:
         self.steps = 0
         self.prefill_tokens = 0
         self.decode_tokens = 0
+        self._span = None                 # serving.request lifecycle span
 
     @property
     def ok(self) -> bool:
@@ -95,29 +98,55 @@ class RoutedFrontend:
         self._completed: list = []
         self.stats_by_class: dict = {}
         self._wall = 0.0
+        # unified-registry mirrors of the per-instance dicts (the dicts stay
+        # the exact source of truth for this frontend; the registry is the
+        # process-wide scrape surface shared with monitors/pools/collectives)
+        reg = default_registry()
+        self._m_requests = reg.counter(
+            "repro_serving_requests_total",
+            "request lifecycle events", ("workload", "event"))
+        self._m_tokens = reg.counter(
+            "repro_serving_tokens_total",
+            "tokens processed by the serving loop", ("workload", "kind"))
+        self._m_parked = reg.gauge(
+            "repro_serving_parked", "requests parked in group queues")
+        self._m_run = reg.histogram(
+            "repro_serving_run_seconds", "RoutedFrontend.run() wall time")
+        self._m_energy = reg.counter(
+            "repro_serving_energy_joules_total",
+            "modeled GEMM energy attributed to completed requests", ("plan",))
+        self._energy_per_token: dict = {}     # plan name -> J/token (cached)
 
     # -- submission ---------------------------------------------------------
     def submit(self, req: ServeRequest) -> Completion:
         comp = Completion(req)
         st = self._class_stats(req.workload)
         st["submitted"] += 1
+        self._m_requests.inc(workload=req.workload, event="submitted")
+        comp._span = start_span("serving.request", uid=req.uid,
+                                workload=req.workload, method=req.method)
         try:
             if req.method not in ("score", "generate", "stream"):
                 raise AdmissionError(f"unknown method {req.method!r}")
-            plan = self.router.route(req.workload, min_bits=req.min_bits,
-                                     bit_stable=req.bit_stable)
-            bucket = self.pool.bucket_for(len(req.prompt), (
-                0 if req.method == "score" else req.max_new))
+            with span("serving.route", uid=req.uid, workload=req.workload):
+                plan = self.router.route(req.workload, min_bits=req.min_bits,
+                                         bit_stable=req.bit_stable)
+                bucket = self.pool.bucket_for(len(req.prompt), (
+                    0 if req.method == "score" else req.max_new))
             if self._queued() >= self.max_queue:
                 raise AdmissionError(
                     f"queue at backpressure cap ({self.max_queue}); retry")
         except (RoutingError, AdmissionError) as e:
             st["rejected"] += 1
+            self._m_requests.inc(workload=req.workload, event="rejected")
+            comp._span.end(status="rejected", reason=type(e).__name__)
             return comp._reject(e)
         comp.plan, comp.bucket = plan.name, bucket.label
+        comp._span.annotate(plan=plan.name, bucket=bucket.label)
         st["plans"][plan.name] += 1
         key = (plan.name, bucket, req.method)
         self._groups.setdefault(key, deque()).append(comp)
+        self._m_parked.set(float(self._queued()))
         return comp
 
     def _queued(self) -> int:
@@ -135,27 +164,32 @@ class RoutedFrontend:
         t0 = time.perf_counter()
         resolved_before = len(self._completed)
         idle_ticks = 0
-        for _ in range(max_steps):
-            if not self._groups and not self._inflight:
-                break
-            activated = self._activate_groups()
-            self._feed_live()
-            progressed = self._step_live()
-            self._harvest()
-            if progressed or activated:
-                idle_ticks = 0
-                continue
-            # one idle tick is legal (an engine retired this tick; a parked
-            # group activates on the next); two in a row means nothing can
-            # ever move — e.g. max_live_batches=0
-            idle_ticks += 1
-            if idle_ticks > 1:
+        with span("serving.run"):
+            for _ in range(max_steps):
+                if not self._groups and not self._inflight:
+                    break
+                activated = self._activate_groups()
+                self._feed_live()
+                progressed = self._step_live()
+                self._harvest()
+                if progressed or activated:
+                    idle_ticks = 0
+                    continue
+                # one idle tick is legal (an engine retired this tick; a
+                # parked group activates on the next); two in a row means
+                # nothing can ever move — e.g. max_live_batches=0
+                idle_ticks += 1
+                if idle_ticks > 1:
+                    raise RuntimeError(
+                        "frontend stalled: queued groups but nothing live "
+                        f"(max_live_batches={self.max_live_batches})")
+            else:
                 raise RuntimeError(
-                    "frontend stalled: queued groups but nothing live "
-                    f"(max_live_batches={self.max_live_batches})")
-        else:
-            raise RuntimeError(f"frontend did not drain in {max_steps} steps")
-        self._wall += time.perf_counter() - t0
+                    f"frontend did not drain in {max_steps} steps")
+        dt = time.perf_counter() - t0
+        self._wall += dt
+        self._m_run.observe(dt)
+        self._m_parked.set(float(self._queued()))
         return self._completed[resolved_before:]
 
     def _activate_groups(self) -> int:
@@ -191,6 +225,14 @@ class RoutedFrontend:
                 st["completed"] += 1
                 st["prefill_tokens"] += len(comp.request.prompt)
                 self._completed.append(comp)
+                wl = comp.request.workload
+                self._m_requests.inc(workload=wl, event="routed")
+                self._m_requests.inc(workload=wl, event="completed")
+                self._m_tokens.inc(len(comp.request.prompt),
+                                   workload=wl, kind="prefill")
+                self._attribute_energy(comp, len(comp.request.prompt))
+                if comp._span is not None:
+                    comp._span.end(status="completed")
 
     def _feed_live(self) -> None:
         """Admit queued requests into their live engines — only what the
@@ -216,6 +258,10 @@ class RoutedFrontend:
                               max_new=comp.request.max_new,
                               on_token=comp.request.on_token)
                 self._inflight[comp.request.uid] = (comp, raw)
+                self._m_requests.inc(workload=comp.request.workload,
+                                     event="routed")
+                if comp._span is not None:
+                    comp._span.annotate(admitted=True)
                 eng.admit(raw)
             if not q:
                 self._groups.pop(key, None)
@@ -243,12 +289,63 @@ class RoutedFrontend:
             st["prefill_tokens"] += raw.prefill_tokens
             st["decode_tokens"] += raw.decode_tokens
             self._completed.append(comp)
+            wl = comp.request.workload
+            self._m_requests.inc(workload=wl, event="completed")
+            self._m_tokens.inc(raw.prefill_tokens, workload=wl,
+                               kind="prefill")
+            self._m_tokens.inc(raw.decode_tokens, workload=wl, kind="decode")
+            self._attribute_energy(comp,
+                                   raw.prefill_tokens + raw.decode_tokens)
+            if comp._span is not None:
+                comp._span.end(status="completed", steps=raw.steps,
+                               decode_tokens=raw.decode_tokens)
         for key in [k for k, e in self._live.items()
                     if e.idle() and not self._groups.get(k)]:
             self._groups.pop(key, None)
             del self._live[key]
 
     # -- reporting ----------------------------------------------------------
+    def _attribute_energy(self, comp: Completion, tokens: int) -> None:
+        """Charge a completed request's modeled GEMM energy to its plan:
+        per-token joules come from the plan's calibration envelope
+        (``obs.plan_energy_per_token``). Derived variants without a plan
+        document on disk attribute 0 — they carry no envelope."""
+        if not comp.plan or tokens <= 0:
+            return
+        jpt = self._energy_per_token.get(comp.plan)
+        if jpt is None:
+            jpt = 0.0
+            rp = self.router._by_name.get(comp.plan)
+            if rp is not None and rp.path is not None:
+                try:
+                    from repro.numerics import load_plan
+                    jpt = plan_energy_per_token(load_plan(rp.path))
+                except (OSError, ValueError, KeyError):
+                    jpt = 0.0
+            self._energy_per_token[comp.plan] = jpt
+        if jpt:
+            self._m_energy.inc(jpt * tokens, plan=comp.plan)
+
+    def metrics(self) -> dict:
+        """Request-accounting snapshot with a closed-sum invariant:
+        ``submitted == routed + parked + rejected`` — every submitted request
+        is exactly one of dispatched-into-an-engine (``routed``), still
+        queued in a group (``parked``), or rejected at admission. After a
+        clean ``run()``, ``parked == 0`` and ``completed == routed``."""
+        submitted = sum(st["submitted"] for st in self.stats_by_class.values())
+        rejected = sum(st["rejected"] for st in self.stats_by_class.values())
+        completed = sum(st["completed"] for st in self.stats_by_class.values())
+        parked = self._queued()
+        routed = len(self._inflight) + completed
+        self._m_parked.set(float(parked))
+        return {
+            "submitted": submitted, "routed": routed, "parked": parked,
+            "rejected": rejected, "completed": completed,
+            "inflight": len(self._inflight),
+            "energy_joules": self._m_energy.total(),
+            "wall_seconds": self._wall,
+        }
+
     def stats(self) -> dict:
         """Per-class routing/latency/throughput plus pool bookkeeping."""
         classes = {}

@@ -157,9 +157,14 @@ def make_train_step(cfg, opt: Optimizer, dist: L.Distribution = L.LOCAL, *,
         # custom_vjp rules trace inside the same context) resolve under the
         # plan's policy, and a later retrace (new shapes, donated buffers)
         # re-applies it instead of depending on the ambient thread state.
+        # The obs span brackets the trace (step compilation shows up in
+        # --trace-out timelines); execution cost lives in the Trainer's
+        # per-step span/histogram.
+        from repro.obs.spans import span as _span
         ctx = (use_policy(numerics_policy) if numerics_policy is not None
                else contextlib.nullcontext())
-        with ctx:
+        with _span("train.step_trace", microbatches=microbatches,
+                   policy=getattr(numerics_policy, "name", None)), ctx:
             if microbatches > 1:
                 grads, metrics = accumulate(params, batch)
             else:
@@ -290,9 +295,11 @@ def make_mesh_train_step(cfg, opt: Optimizer, dist: L.Distribution, *,
         out_specs=((P(), P()), P()))
 
     def step(carry, batch):
+        from repro.obs.spans import span as _span
         ctx = (use_policy(numerics_policy) if numerics_policy is not None
                else contextlib.nullcontext())
-        with ctx:
+        with _span("train.mesh_step_trace", axes=",".join(axes),
+                   policy=getattr(numerics_policy, "name", None)), ctx:
             return sharded(carry, batch)
 
     return jax.jit(step)
@@ -342,6 +349,11 @@ class Trainer:
         self.failure_injector = failure_injector
         self.place_state = place_state
         self.metrics_log: list = []
+        from repro.obs.registry import default_registry
+        self._m_step = default_registry().histogram(
+            "repro_train_step_seconds", "Trainer per-step wall time")
+        self._m_restarts = default_registry().counter(
+            "repro_train_restarts_total", "fault-tolerant restore events")
 
     def init_or_restore(self, key):
         from repro.models import init as minit
@@ -363,15 +375,18 @@ class Trainer:
         key = key if key is not None else jax.random.key(0)
         step, carry = self.init_or_restore(key)
         restarts = 0
+        from repro.obs.spans import span as _span
         while step < n_steps:
             try:
                 t0 = time.perf_counter()
                 if self.failure_injector is not None:
                     self.failure_injector(step)
                 batch = self.data(step)
-                carry, metrics = self.step_fn(carry, batch)
+                with _span("train.step", step=step):
+                    carry, metrics = self.step_fn(carry, batch)
                 dt = time.perf_counter() - t0
                 self.monitor.record(step, dt)
+                self._m_step.observe(dt)
                 self.metrics_log.append(
                     {k: float(v) for k, v in metrics.items()} | {"step": step})
                 step += 1
@@ -382,6 +397,7 @@ class Trainer:
                 restarts += 1
                 if restarts > max_restarts:
                     raise
+                self._m_restarts.inc()
                 step, carry = self.init_or_restore(key)
         return carry
 

@@ -1,0 +1,312 @@
+"""repro.obs — unified metrics registry, trace spans, and live
+calibration-envelope monitors.
+
+The monitor tests drive the real dispatch trace-hook seam: synthetic
+envelopes prove the inside / near-edge / violated classification, a jitted
+GEMM proves monitoring never retraces (the staged-callback contract), and
+the acceptance test loads the checked-in paper_mlp plan's envelope and shows
+an injected out-of-envelope dispatch flips exactly the named site to
+``violated`` while ordinary traffic stays ``inside``.
+"""
+
+import json
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.obs import (MetricError, Registry, chrome_trace, current_span,
+                       span, start_span)
+from repro.obs.monitor import (INSIDE, NEAR_EDGE, UNMONITORED, VIOLATED,
+                               NumericsMonitor, monitoring)
+from repro.obs.spans import recorder
+
+PLANS_DIR = os.path.join(os.path.dirname(__file__), "..", "examples", "plans")
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_registry_counter_gauge_histogram_roundtrip():
+    reg = Registry()
+    c = reg.counter("repro_x_total", "things", ("kind",))
+    c.inc(kind="a")
+    c.inc(2, kind="b")
+    g = reg.gauge("repro_y", "level")
+    g.set(4.5)
+    h = reg.histogram("repro_z_seconds", "latency")
+    h.observe(0.01)
+    h.observe(2.0)
+
+    snap = json.loads(json.dumps(reg.snapshot()))   # JSON round-trip
+    assert snap["kind"] == "repro.obs.MetricsSnapshot"
+    by_name = snap["metrics"]
+    assert by_name["repro_x_total"]["kind"] == "counter"
+    vals = {tuple(sorted(s["labels"].items())): s["value"]
+            for s in by_name["repro_x_total"]["values"]}
+    assert vals[(("kind", "a"),)] == 1 and vals[(("kind", "b"),)] == 2
+    assert by_name["repro_y"]["values"][0]["value"] == 4.5
+    hsample = by_name["repro_z_seconds"]["values"][0]
+    assert hsample["count"] == 2 and hsample["sum"] == pytest.approx(2.01)
+    assert hsample["buckets"]["+Inf"] == 2
+
+    text = reg.exposition()
+    assert '# TYPE repro_x_total counter' in text
+    assert 'repro_x_total{kind="a"} 1' in text
+    assert 'repro_z_seconds_count 2' in text
+
+    assert c.total() == 3.0
+    reg.reset()
+    assert c.total() == 0.0 and c.value(kind="a") == 0.0   # handles survive
+
+
+def test_registry_rejects_mismatched_redeclaration():
+    reg = Registry()
+    reg.counter("repro_m_total", "x", ("a",))
+    with pytest.raises(MetricError):
+        reg.gauge("repro_m_total", "x", ("a",))         # kind mismatch
+    with pytest.raises(MetricError):
+        reg.counter("repro_m_total", "x", ("b",))       # label mismatch
+    with pytest.raises(MetricError):
+        reg.counter("repro_m_total", "x", ("a",)).inc(-1)   # negative inc
+
+
+# ---------------------------------------------------------------------------
+# spans + chrome trace export
+# ---------------------------------------------------------------------------
+def test_span_nesting_and_chrome_trace_validity():
+    recorder().clear()
+    with span("serving.outer", plan="p") as outer:
+        assert current_span() is outer
+        with span("serving.inner"):
+            assert current_span().name == "serving.inner"
+        assert current_span() is outer
+    sp = start_span("train.lifecycle", uid=7)
+    assert current_span() is None          # manual spans stay off the stack
+    sp.end(status="done")
+    sp.end()                               # idempotent: recorded once
+
+    events = recorder().events()
+    names = [e["name"] for e in events]
+    assert names == ["serving.inner", "serving.outer", "train.lifecycle"]
+
+    doc = json.loads(json.dumps(chrome_trace()))     # valid JSON
+    assert doc["displayTimeUnit"] == "ms"
+    assert len(doc["traceEvents"]) == 3
+    for ev in doc["traceEvents"]:
+        assert ev["ph"] == "X" and ev["dur"] >= 0 and ev["ts"] >= 0
+    by_name = {e["name"]: e for e in doc["traceEvents"]}
+    assert by_name["serving.outer"]["cat"] == "serving"
+    assert by_name["train.lifecycle"]["args"] == {"uid": 7, "status": "done"}
+    # inner nests inside outer on the timeline
+    o, i = by_name["serving.outer"], by_name["serving.inner"]
+    assert o["ts"] <= i["ts"] and i["ts"] + i["dur"] <= o["ts"] + o["dur"]
+
+
+# ---------------------------------------------------------------------------
+# monitor classification vs a synthetic envelope
+# ---------------------------------------------------------------------------
+def _env(msb=127, lsb=None, a=(-8, 2), b=(-8, 2)):
+    return {"version": 1, "sites": {"s": {
+        "a_exp": list(a), "b_exp": list(b), "out_exp": [None, None],
+        "msb": msb, "lsb": lsb, "calls": 4, "max_k": 8}}}
+
+
+def _drive(mon, scale_a=1.0, scale_b=1.0):
+    from repro.core import dispatch
+    with mon:
+        out = dispatch.gemm(scale_a * jnp.ones((4, 8), jnp.float32),
+                            scale_b * jnp.ones((8, 4), jnp.float32),
+                            site="s")
+        jax.block_until_ready(out)
+    return mon
+
+
+def test_monitor_inside_on_calibration_like_traffic():
+    mon = _drive(NumericsMonitor(_env(), registry=Registry()), 0.5, 0.5)
+    info = mon.status("s")
+    assert info["status"] == INSIDE
+    assert mon.worst_status() == INSIDE and mon.overflow_events() == 0
+    assert info["live"]["calls"] == 1 and info["live"]["max_k"] == 8
+
+
+def test_monitor_near_edge_on_exponent_drift():
+    # operands at 2^10 vs traced a_exp hi of 2 (+2 grace): near-edge, and the
+    # detail names the excursion
+    mon = _drive(NumericsMonitor(_env(), registry=Registry()), 2.0 ** 10, 0.5)
+    info = mon.status("s")
+    assert info["status"] == NEAR_EDGE
+    assert "traced range" in info["detail"]
+
+
+def test_monitor_low_side_drift_only_flags_fixed_point():
+    # tiny operands: harmless on a native site (lsb None) ...
+    mon = _drive(NumericsMonitor(_env(), registry=Registry()),
+                 2.0 ** -20, 2.0 ** -20)
+    assert mon.status("s")["status"] == INSIDE
+    # ... but on a fixed-point site they risk quantizing to zero
+    mon = _drive(NumericsMonitor(_env(lsb=-30), registry=Registry()),
+                 2.0 ** -20, 2.0 ** -20)
+    assert mon.status("s")["status"] == NEAR_EDGE
+
+
+def test_monitor_violated_when_msb_capacity_exceeded():
+    # envelope says the deployed accumulator caps at msb=20; live traffic
+    # needs ~2*14+growth bits
+    mon = _drive(NumericsMonitor(_env(msb=20), registry=Registry()),
+                 2.0 ** 14, 2.0 ** 14)
+    info = mon.status("s")
+    assert info["status"] == VIOLATED
+    assert "exceeds deployed capacity 20" in info["detail"]
+
+
+def test_monitor_nonfinite_counts_overflow_event():
+    reg = Registry()
+    mon = _drive(NumericsMonitor(_env(), registry=reg), 2.0 ** 70, 2.0 ** 70)
+    assert mon.status("s")["status"] == VIOLATED
+    assert mon.overflow_events() >= 1
+    counted = reg.counter(
+        "repro_overflow_events_total", "", ("site", "source"))
+    assert counted.value(site="s", source="gemm_nonfinite") == 1
+
+
+def test_monitor_alert_sink_fires_once_per_escalation():
+    fired = []
+    mon = NumericsMonitor(_env(msb=20), registry=Registry(),
+                          alert_sink=lambda s, status, info:
+                          fired.append((s, status)))
+    _drive(mon, 2.0 ** 14, 2.0 ** 14)
+    _drive(mon, 2.0 ** 14, 2.0 ** 14)      # same level: no second alert
+    assert fired == [("s", VIOLATED)]
+
+
+def test_monitor_unenveloped_site_reports_no_envelope():
+    mon = _drive(NumericsMonitor(None, registry=Registry()), 1.0, 1.0)
+    assert mon.status("s")["status"] == UNMONITORED
+
+
+def test_monitor_does_not_retrace():
+    from repro.core import dispatch
+    reg = Registry()
+    mon = NumericsMonitor(_env(), registry=reg)
+    traces = []
+
+    @jax.jit
+    def f(a, b):
+        traces.append(1)                  # python side effect: trace only
+        return dispatch.gemm(a, b, site="s")
+
+    with mon:
+        for i in range(3):
+            jax.block_until_ready(
+                f(jnp.ones((4, 8)) * (0.5 + i * 0.1), jnp.ones((8, 4))))
+    assert len(traces) == 1               # staged callback, no retrace
+    calls = reg.counter("repro_monitor_calls_total", "", ("site",))
+    assert calls.value(site="s") == 3     # ...but every execution recorded
+
+
+def test_monitor_coexists_with_calibration():
+    # a monitor stays installed across a set_trace_hook set/restore pair
+    from repro.core import dispatch
+    reg = Registry()
+    mon = NumericsMonitor(_env(), registry=reg).install()
+    try:
+        prev = dispatch.set_trace_hook(lambda *a: None)
+        dispatch.set_trace_hook(prev)
+        jax.block_until_ready(dispatch.gemm(
+            jnp.ones((4, 8)), jnp.ones((8, 4)), site="s"))
+        jax.effects_barrier()
+    finally:
+        mon.uninstall()
+    calls = reg.counter("repro_monitor_calls_total", "", ("site",))
+    assert calls.value(site="s") == 1
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the checked-in paper_mlp envelope catches an injected
+# out-of-envelope dispatch and names the site
+# ---------------------------------------------------------------------------
+def test_paper_mlp_envelope_violation_names_site():
+    from repro.numerics import load_plan
+    plan = load_plan(os.path.join(PLANS_DIR, "paper_mlp.json"))
+    env = plan.meta["envelope"]
+    assert env["sites"], "checked-in plan must carry an envelope"
+    site = "attn_qk"
+    assert site in env["sites"]
+
+    pol = plan.to_policy()
+    from repro.core import dispatch
+    with monitoring(plan, registry=Registry()) as mon:
+        # calibration-like traffic: inside
+        jax.block_until_ready(dispatch.gemm(
+            0.5 * jnp.ones((4, 8), jnp.float32),
+            0.5 * jnp.ones((8, 4), jnp.float32), site=site, policy=pol))
+        jax.effects_barrier()
+        assert mon.status(site)["status"] == INSIDE
+        # injected out-of-envelope dispatch: violated, and only this site
+        jax.block_until_ready(dispatch.gemm(
+            jnp.full((4, 8), 2.0 ** 70, jnp.float32),
+            jnp.full((8, 4), 2.0 ** 70, jnp.float32), site=site, policy=pol))
+    info = mon.status(site)
+    assert info["status"] == VIOLATED and info["site"] == site
+    assert mon.worst_status() == VIOLATED
+    assert mon.overflow_events() >= 1
+    others = {s: i["status"] for s, i in mon.statuses().items()
+              if s != site and i["live"] is not None}
+    assert all(st == INSIDE for st in others.values())
+    snap = json.loads(json.dumps(mon.snapshot()))    # JSON-able
+    assert snap["worst_status"] == VIOLATED
+
+
+# ---------------------------------------------------------------------------
+# plan-cache stats migrated onto the registry (deprecated view intact)
+# ---------------------------------------------------------------------------
+def test_plan_cache_stats_is_registry_view():
+    from repro.core import dispatch
+    dispatch.clear_plan_cache()
+    st0 = dispatch.plan_cache_stats()
+    assert st0.hits == 0 and st0.size == 0
+    spec = dispatch.AccumulatorSpec(ovf=30, msb=30, lsb=-30)
+    dispatch.plan_gemm(16, 16, 32, fmt=dispatch.FP32, spec=spec)   # miss
+    dispatch.plan_gemm(16, 16, 32, fmt=dispatch.FP32, spec=spec)   # hit
+    st1 = dispatch.plan_cache_stats()
+    assert st1.misses == 1 and st1.hits == 1 and st1.size == 1
+    from repro.obs import default_registry
+    ops = default_registry().counter(
+        "repro_plan_cache_ops_total", "", ("op",))
+    assert ops.value(op="misses") == st1.misses     # same numbers, one source
+    assert ops.value(op="hits") == st1.hits
+    dispatch.clear_plan_cache()
+    assert dispatch.plan_cache_stats().size == 0
+
+
+# ---------------------------------------------------------------------------
+# validate_overflow ergonomics (collectives satellite)
+# ---------------------------------------------------------------------------
+def test_validate_overflow_names_site_and_counts():
+    from repro.obs import default_registry
+    from repro.parallel.collectives import _grid_quantize, validate_overflow
+    c = default_registry().counter(
+        "repro_overflow_events_total", "", ("site", "source"))
+    before = c.value(site="obs_test@coll", source="collective")
+    with validate_overflow():
+        with pytest.raises(OverflowError, match="obs_test@coll"):
+            _grid_quantize(jnp.array([1e9]), -16, 16, site="obs_test@coll")
+    assert c.value(site="obs_test@coll", source="collective") == before + 1
+
+
+def test_validate_overflow_warn_mode_does_not_raise():
+    from repro.parallel.collectives import _grid_quantize, validate_overflow
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        with validate_overflow(mode="warn"):
+            q = _grid_quantize(jnp.array([1e9]), -16, 16,
+                               site="obs_warn@coll")
+            jax.block_until_ready(q)
+    assert int(q[0]) == 2 ** 15 - 1               # clipped, not crashed
+    assert any("obs_warn@coll" in str(x.message) for x in w)
+    with pytest.raises(ValueError, match="mode"):
+        with validate_overflow(mode="explode"):
+            pass

@@ -299,6 +299,34 @@ def test_frontend_rejections_are_futures(mlp):
     assert st["classes"]["chat"]["rejected"] == 2
 
 
+def test_frontend_metrics_sum_invariant(mlp):
+    """RoutedFrontend.metrics(): submitted == routed + parked + rejected at
+    every observable point — before run() (work parked), and after (all
+    routed work completed, nothing parked)."""
+    cfg, params = mlp
+    router = PlanRouter.from_manifest(PLANS_DIR, arch="paper-mlp")
+    pool = BucketedEnginePool(cfg, params, "2x32")
+    front = RoutedFrontend(pool, router)
+    comps = [front.submit(ServeRequest(uid=i, prompt=[3 + i, 7, 1],
+                                       max_new=4, workload="chat"))
+             for i in range(3)]
+    front.submit(ServeRequest(uid=9, prompt=[1, 2], max_new=4,
+                              workload="chat", min_bits=99.0))   # rejected
+
+    m = front.metrics()
+    assert m["submitted"] == 4 and m["rejected"] == 1
+    assert m["parked"] == 3 and m["completed"] == 0
+    assert m["submitted"] == m["routed"] + m["parked"] + m["rejected"]
+
+    front.run()
+    assert all(c.ok for c in comps)
+    m = front.metrics()
+    assert m["submitted"] == 4 and m["parked"] == 0
+    assert m["completed"] == 3 and m["routed"] == 3
+    assert m["submitted"] == m["routed"] + m["parked"] + m["rejected"]
+    assert m["wall_seconds"] > 0
+
+
 def test_score_method_matches_forward(mlp):
     import jax.numpy as jnp
     from repro.core.dispatch import use_policy
